@@ -1,0 +1,21 @@
+"""Paper Fig. 16: contribution of individual ideas — program-level FCFS,
+static TTL (cold-start formula), full Continuum."""
+from benchmarks.common import ABLATIONS, emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 100
+    rows = [run_one(p, n=n, rate=0.055) for p in ABLATIONS]
+    save_rows("fig16_ablation", rows)
+    base = rows[0]["avg_jct"]
+    prev = base
+    for r in rows[1:]:
+        emit(f"fig16.{r['policy']}.cumulative_speedup",
+             base / max(r["avg_jct"], 1e-9),
+             f"delta vs prev={prev / max(r['avg_jct'], 1e-9):.3f}")
+        prev = r["avg_jct"]
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,30 @@
+"""Paper Fig. 12 + §6.2 distributed setting: multi-engine fleet with
+session-aware routing (Continuum) vs round-robin baselines; straggler
+mitigation via migration."""
+from benchmarks.common import emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 60 if quick else 150
+    rate = 0.16                                       # fleet-level load (4x)
+    rows = []
+    for policy, router in (("vllm", "round_robin"),
+                           ("continuum", "round_robin"),
+                           ("continuum", "session")):
+        r = run_one(policy, n=n, rate=rate, n_engines=4, offload=200e9,
+                    router_policy=router)
+        rows.append({**r, "router": router})
+    save_rows("fig12_distributed", rows)
+    rr = next(r for r in rows if r["router"] == "round_robin"
+              and r["policy"] == "continuum")
+    ses = next(r for r in rows if r["router"] == "session")
+    v = next(r for r in rows if r["policy"] == "vllm")
+    emit("fig12.session_vs_roundrobin_jct", rr["avg_jct"] / max(ses["avg_jct"], 1e-9),
+         "session-aware routing preserves TTL hits")
+    emit("fig12.continuum_vs_vllm_fleet", v["avg_jct"] / max(ses["avg_jct"], 1e-9),
+         f"fleet of 4 engines @ {rate} jps")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

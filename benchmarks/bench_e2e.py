@@ -1,0 +1,32 @@
+"""Paper Fig. 8: end-to-end JCT + throughput vs job rate, per policy,
+on SWE-Bench and BFCL workloads."""
+from benchmarks.common import POLICIES, emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 100
+    rates = (0.04, 0.055, 0.07) if quick else (0.03, 0.04, 0.05, 0.06, 0.08)
+    rows = []
+    for workload in ("swe-bench", "bfcl"):
+        for rate in rates:
+            for policy in POLICIES:
+                r = run_one(policy, workload=workload, n=n, rate=rate)
+                rows.append(r)
+    save_rows("fig8_e2e", rows)
+    # headline: Continuum vs vLLM at the highest common rate
+    for workload in ("swe-bench", "bfcl"):
+        sub = [r for r in rows if r["workload"] == workload and
+               r["rate"] == rates[-1]]
+        v = next(r for r in sub if r["policy"] == "vllm")
+        c = next(r for r in sub if r["policy"] == "continuum")
+        emit(f"fig8.{workload}.jct_speedup_vs_vllm",
+             v["avg_jct"] / max(c["avg_jct"], 1e-9),
+             f"vllm={v['avg_jct']:.0f}s continuum={c['avg_jct']:.0f}s")
+        emit(f"fig8.{workload}.throughput_gain_vs_vllm",
+             c["throughput_jpm"] / max(v["throughput_jpm"], 1e-9),
+             f"{c['throughput_jpm']:.2f} vs {v['throughput_jpm']:.2f} jobs/min")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

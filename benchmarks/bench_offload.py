@@ -1,0 +1,33 @@
+"""Paper Fig. 10 (+Fig. 15): CPU-DRAM offloading variants (incl. Autellix+
+= PLAS + LMCache), and the SSD tier extension."""
+from benchmarks.common import emit, run_one, save_rows
+
+DRAM = 200e9
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 100
+    rate = 0.06
+    rows = []
+    for policy in ("vllm", "autellix", "infercept", "continuum"):
+        rows.append({**run_one(policy, n=n, rate=rate, offload=DRAM,
+                               kv_budget=10e9), "tier": "dram"})
+    # SSD extension (Fig. 15): smaller DRAM + SSD spillover
+    for policy in ("vllm", "infercept", "continuum"):
+        rows.append({**run_one(policy, n=n, rate=rate, offload=50e9, ssd=500e9,
+                               kv_budget=10e9), "tier": "dram+ssd"})
+    save_rows("fig10_offload", rows)
+    v = next(r for r in rows if r["policy"] == "vllm" and r["tier"] == "dram")
+    c = next(r for r in rows if r["policy"] == "continuum" and r["tier"] == "dram")
+    i = next(r for r in rows if r["policy"] == "infercept" and r["tier"] == "dram")
+    emit("fig10.jct_speedup_vs_vllm_offload", v["avg_jct"] / max(c["avg_jct"], 1e-9),
+         f"continuum={c['avg_jct']:.0f}s infercept={i['avg_jct']:.0f}s")
+    cs = next(r for r in rows if r["policy"] == "continuum" and r["tier"] == "dram+ssd")
+    vs = next(r for r in rows if r["policy"] == "vllm" and r["tier"] == "dram+ssd")
+    emit("fig15.ssd_jct_speedup_vs_vllm", vs["avg_jct"] / max(cs["avg_jct"], 1e-9),
+         f"continuum={cs['avg_jct']:.0f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

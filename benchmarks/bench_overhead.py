@@ -1,0 +1,59 @@
+"""Paper Table 4: scheduler overhead (wall-clock per Schedule() call) per
+policy, with and without offloading enabled."""
+import time
+
+from benchmarks.common import emit, save_rows
+
+import sys
+from pathlib import Path
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.core.policies import make_policy
+from repro.core.scheduler import Scheduler
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.ttl import TTLModel
+from repro.core.types import Request
+from repro.serving.blocks import BlockConfig, BlockManager
+from repro.serving.offload import OffloadConfig, OffloadManager
+
+
+def measure(policy: str, offload: bool, n_wait: int = 256,
+            iters: int = 200) -> float:
+    handler = ToolCallHandler(TTLModel(), prefill_reload_fn=lambda r: 1.0)
+    for i in range(200):
+        handler.ttl_model.observe_tool(f"t{i % 8}", 0.5 + i % 5)
+    off = OffloadManager(OffloadConfig()) if offload else None
+    total = 0.0
+    for it in range(iters):
+        blocks = BlockManager(BlockConfig(100000, 16))
+        sched = Scheduler(make_policy(policy), handler, blocks, off)
+        sched._kv_bytes_per_token = 4e4
+        for i in range(n_wait):
+            sched.on_request_arrive(
+                Request(program_id=f"p{i}", turn_idx=i % 5, prompt_len=4096,
+                        output_len=256, arrival_time=float(i),
+                        program_arrival_time=float(i), tool="ls"), float(i))
+        t0 = time.perf_counter()
+        sched.schedule(float(n_wait), max_admits=64)
+        total += time.perf_counter() - t0
+    return total / iters * 1000.0  # ms per Schedule() over a 256-deep queue
+
+
+def run(quick: bool = True) -> list[dict]:
+    iters = 30 if quick else 200
+    rows = []
+    for policy in ("vllm", "autellix", "infercept", "continuum"):
+        for off in (False, True):
+            ms = measure(policy, off, iters=iters)
+            rows.append({"policy": policy, "offload": off, "ms_per_step": ms})
+    save_rows("table4_overhead", rows)
+    ours = next(r for r in rows if r["policy"] == "continuum" and not r["offload"])
+    base = next(r for r in rows if r["policy"] == "vllm" and not r["offload"])
+    emit("table4.continuum_sched_ms", ours["ms_per_step"],
+         f"vllm={base['ms_per_step']:.3f}ms (single-digit-ms class)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,24 @@
+"""Paper Table 5: RL-rollout micro-benchmark — inference steps/minute for
+OpenHands-style rollouts on a single engine (8-chip node)."""
+from benchmarks.common import emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 100
+    rows = []
+    for policy in ("vllm", "continuum"):
+        r = run_one(policy, workload="openhands", n=n, rate=0.12,
+                    kv_budget=40e9)
+        # steps/min = LLM turns completed per minute of makespan
+        r["steps_per_min"] = r["throughput_jpm"] * 20.0   # ~20 turns/program
+        rows.append(r)
+    save_rows("table5_rollout", rows)
+    v, c = rows[0], rows[1]
+    emit("table5.rollout_steps_per_min_gain",
+         c["steps_per_min"] / max(v["steps_per_min"], 1e-9),
+         f"vllm={v['steps_per_min']:.1f} continuum={c['steps_per_min']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

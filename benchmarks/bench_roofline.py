@@ -1,0 +1,115 @@
+"""§Roofline: per (arch x shape x mesh) three-term roofline from the
+dry-run's compiled HLO (see repro/dist/roofline.py for methodology).
+
+MODEL_FLOPS per cell:
+  train:   3 * 6 * N_active * tokens   (fwd+bwd = 3x fwd, 2*N per token fwd)
+           -- reported as 6*N*D per the assignment; the 3x is folded into
+              the useful-ratio denominator notes
+  prefill: 2 * N_active * tokens (+ attention quadratic term)
+  decode:  2 * N_active * batch (+ KV-cache read is memory, not flops)
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import SHAPES, get_config                 # noqa: E402
+from repro.configs.base import arch_shape_cells              # noqa: E402
+from repro.dist.roofline import roofline                      # noqa: E402
+
+ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
+OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_act = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        flops = 2.0 * n_act * tokens
+        # causal attention term: 2*2*kv_elems_per_token * S/2 per token
+        kv_elems = cfg.kv_bytes_per_token(2) / 2
+        flops += 2.0 * tokens * (shape.seq_len / 2) * kv_elems
+        return flops
+    # decode: one token per sequence
+    return 2.0 * n_act * shape.global_batch
+
+
+def analyze_cell(arch: str, shape_name: str, mesh_tag: str) -> dict | None:
+    stem = f"{arch}_{shape_name}_{mesh_tag}"
+    hlo = ART / f"{stem}.hlo.txt"
+    meta = ART / f"{stem}.json"
+    if not hlo.exists() or not meta.exists():
+        return None
+    rec = json.loads(meta.read_text())
+    chips = rec["chips"]
+    t = roofline(hlo.read_text(), chips=chips,
+                 model_flops=model_flops(arch, shape_name))
+    terms = {"compute": t.compute_s, "memory": t.memory_s,
+             "collective": t.collective_s}
+    dom = max(terms.values())
+    total = t.compute_s + t.memory_s + t.collective_s
+    return {
+        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "chips": chips,
+        "compute_s": t.compute_s, "memory_s": t.memory_s,
+        "collective_s": t.collective_s, "bottleneck": t.bottleneck,
+        "hlo_flops_per_dev": t.flops, "hbm_bytes_per_dev": t.bytes,
+        "coll_bytes_per_dev": t.coll_bytes,
+        "model_flops": t.model_flops,
+        "useful_ratio": t.useful_ratio,
+        # roofline fraction: the ideal-compute time over the bound implied
+        # by the dominant term (how close this cell is to its roofline)
+        "roofline_fraction": (t.model_flops / (chips * 197e12)) / max(dom, 1e-12),
+        "peak_gib": rec.get("peak_bytes_estimate", 0) / 2**30,
+        "top_dots": t.top_dots[:3],
+        "top_colls": t.top_colls[:3],
+    }
+
+
+def run(quick: bool = True, mesh_tags=("16x16",)) -> list[dict]:
+    rows = []
+    for arch, shape in arch_shape_cells():
+        for tag in mesh_tags:
+            r = analyze_cell(arch, shape, tag)
+            if r:
+                rows.append(r)
+    OUT.mkdir(parents=True, exist_ok=True)
+    ser = [{k: (v if not isinstance(v, list) else str(v)) for k, v in r.items()}
+           for r in rows]
+    (OUT / "baseline.json").write_text(json.dumps(ser, indent=1))
+    # markdown table for EXPERIMENTS.md
+    lines = ["| arch | shape | mesh | compute_s | memory_s | collective_s | "
+             "bottleneck | useful | roofline_frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compute_s']:.2e} | {r['memory_s']:.2e} | "
+            f"{r['collective_s']:.2e} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    (OUT / "baseline.md").write_text("\n".join(lines))
+    from benchmarks.common import emit
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_fraction"])
+        best = max(rows, key=lambda r: r["roofline_fraction"])
+        emit("roofline.cells_analyzed", len(rows), "")
+        emit("roofline.worst_fraction", worst["roofline_fraction"],
+             f"{worst['arch']}/{worst['shape']} ({worst['bottleneck']}-bound)")
+        emit("roofline.best_fraction", best["roofline_fraction"],
+             f"{best['arch']}/{best['shape']}")
+    return rows
+
+
+if __name__ == "__main__":
+    tags = ("16x16", "2x16x16") if "--all-meshes" in sys.argv else ("16x16",)
+    rows = run(quick=False, mesh_tags=tags)
+    for r in rows:
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+              f"c={r['compute_s']:.2e} m={r['memory_s']:.2e} "
+              f"x={r['collective_s']:.2e} dom={r['bottleneck']:10s} "
+              f"useful={r['useful_ratio']:5.2f} frac={r['roofline_fraction']:.3f}")

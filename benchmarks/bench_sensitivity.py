@@ -1,0 +1,28 @@
+"""Paper Fig. 13: robustness across engine configs (max batch, chunk size)."""
+from benchmarks.common import emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 30 if quick else 80
+    rows = []
+    for mb in (16, 48, 96):
+        for policy in ("vllm", "continuum"):
+            rows.append({**run_one(policy, n=n, rate=0.05, max_batch=mb),
+                         "knob": f"max_batch={mb}"})
+    for cs in (256, 1024, 2048, 4096):
+        for policy in ("vllm", "continuum"):
+            rows.append({**run_one(policy, n=n, rate=0.05, chunk_size=cs),
+                         "knob": f"chunk={cs}"})
+    save_rows("fig13_sensitivity", rows)
+    speedups = []
+    for knob in {r["knob"] for r in rows}:
+        v = next(r for r in rows if r["knob"] == knob and r["policy"] == "vllm")
+        c = next(r for r in rows if r["knob"] == knob and r["policy"] == "continuum")
+        speedups.append(v["avg_jct"] / max(c["avg_jct"], 1e-9))
+    emit("fig13.min_speedup_across_configs", min(speedups),
+         f"max={max(speedups):.2f} (stable across batch/chunk)")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,20 @@
+"""Paper Fig. 11: P90/P95 tail latency (per-turn queueing delay shows up in
+the tail first)."""
+from benchmarks.common import POLICIES, emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 50 if quick else 120
+    rows = [run_one(p, n=n, rate=0.06, offload=200e9, kv_budget=10e9)
+            for p in POLICIES]
+    save_rows("fig11_tail", rows)
+    v = next(r for r in rows if r["policy"] == "vllm")
+    c = next(r for r in rows if r["policy"] == "continuum")
+    emit("fig11.p95_speedup_vs_vllm", v["p95"] / max(c["p95"], 1e-9),
+         f"p95 vllm={v['p95']:.0f}s continuum={c['p95']:.0f}s")
+    emit("fig11.p90_speedup_vs_vllm", v["p90"] / max(c["p90"], 1e-9), "")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,28 @@
+"""Paper Fig. 14: scaling law for turn numbers (repeat trace 1-5x with
+inversely scaled token lengths)."""
+from benchmarks.common import emit, run_one, save_rows
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 30 if quick else 80
+    rows = []
+    scales = (1.0, 2.0, 3.0) if quick else (1.0, 2.0, 3.0, 4.0, 5.0)
+    for ts in scales:
+        for policy in ("vllm", "infercept", "continuum"):
+            rows.append({**run_one(policy, n=n, rate=0.05, offload=200e9,
+                                   kv_budget=10e9, turn_scale=ts),
+                         "turn_scale": ts})
+    save_rows("fig14_turns", rows)
+    lo = [r for r in rows if r["turn_scale"] == scales[0]]
+    hi = [r for r in rows if r["turn_scale"] == scales[-1]]
+    for policy in ("vllm", "continuum"):
+        l = next(r for r in lo if r["policy"] == policy)
+        h = next(r for r in hi if r["policy"] == policy)
+        emit(f"fig14.{policy}.jct_growth_{int(scales[-1])}x_turns",
+             h["avg_jct"] / max(l["avg_jct"], 1e-9),
+             f"{l['avg_jct']:.0f}s -> {h['avg_jct']:.0f}s")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

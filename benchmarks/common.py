@@ -1,0 +1,84 @@
+"""Shared benchmark utilities: policy-grid runs over agent workloads."""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config                      # noqa: E402
+from repro.serving.engine import Engine, EngineConfig     # noqa: E402
+from repro.serving.offload import OffloadConfig           # noqa: E402
+from repro.serving.profiler import HardwareProfile        # noqa: E402
+from repro.sim.runner import run_workload                 # noqa: E402
+from repro.sim.workload import WORKLOADS, generate_programs  # noqa: E402
+
+RESULTS_DIR = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+# paper-like single-host serving footprint: the KV pool is the contended
+# resource (Llama-8B on one A100/H100 ~ 40-60 GB of KV)
+DEFAULT = dict(arch="glm4-9b", chips=8, kv_budget=40e9, max_batch=48,
+               chunk_size=2048)
+
+POLICIES = ("vllm", "autellix", "infercept", "continuum")
+ABLATIONS = ("vllm", "fcfs_program", "static_ttl", "continuum")
+
+
+def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
+            offload=None, ssd=0.0, arch=None, chips=None, kv_budget=None,
+            max_batch=None, chunk_size=None, turn_scale=1.0,
+            scheduler_overhead_s=0.0, n_engines=1, router_policy="session"):
+    arch_cfg = get_config(arch or DEFAULT["arch"])
+    spec = WORKLOADS[workload]
+    programs = generate_programs(spec, n=n, rate_jps=rate, seed=seed,
+                                 turn_scale=turn_scale)
+    off = None
+    if offload:
+        off = OffloadConfig(dram_bytes=offload, ssd_bytes=ssd)
+    engines = []
+    for i in range(n_engines):
+        ecfg = EngineConfig(
+            policy=policy, chips=chips or DEFAULT["chips"], offload=off,
+            max_batch=max_batch or DEFAULT["max_batch"],
+            chunk_size=chunk_size or DEFAULT["chunk_size"],
+            kv_budget_bytes=kv_budget or DEFAULT["kv_budget"],
+            scheduler_overhead_s=scheduler_overhead_s)
+        engines.append(Engine(arch_cfg, ecfg, HardwareProfile(),
+                              engine_id=f"e{i}"))
+    from repro.serving.router import Router
+    router = Router(engines, policy=router_policy)
+    t0 = time.time()
+    summary = run_workload(programs, engines, router, max_seconds=1e7)
+    wall = time.time() - t0
+    stats = engines[0].scheduler.stats
+    return {"policy": policy, "workload": workload, "rate": rate,
+            "avg_jct": summary.avg_jct, "p50": summary.p50_jct,
+            "p90": summary.p90_jct, "p95": summary.p95_jct,
+            "throughput_jpm": summary.throughput_jobs_per_s * 60,
+            "tok_per_s": summary.throughput_tokens_per_s,
+            "queueing": summary.avg_queueing,
+            "ttl_hit_rate": summary.avg_ttl_hit_rate,
+            "pins": stats.pins, "hits": stats.ttl_hits,
+            "expiries": stats.ttl_expiries,
+            "evictions": stats.deadlock_evictions,
+            "preemptions": stats.preemptions,
+            "wall_s": wall}
+
+
+def save_rows(name: str, rows: list[dict]) -> Path:
+    import csv
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    path = RESULTS_DIR / f"{name}.csv"
+    if rows:
+        fields = list(dict.fromkeys(k for r in rows for k in r))
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fields, restval="")
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    """benchmarks.run contract: ``name,us_per_call,derived`` CSV lines."""
+    print(f"{name},{value:.3f},{derived}")

@@ -1,0 +1,43 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (per the harness contract) and
+writes full CSVs to experiments/bench/. ``--full`` uses paper-scale sizes.
+"""
+import sys
+import time
+
+
+def main() -> None:
+    quick = "--full" not in sys.argv
+    from benchmarks import (bench_ablation, bench_distributed, bench_e2e,
+                            bench_memoryfulness,
+                            bench_offload, bench_overhead, bench_roofline,
+                            bench_rollout, bench_sensitivity, bench_tail,
+                            bench_turns)
+    benches = [
+        ("fig8_e2e", bench_e2e.run),
+        ("fig10_offload", bench_offload.run),
+        ("fig11_tail", bench_tail.run),
+        ("fig12_distributed", bench_distributed.run),
+        ("fig13_sensitivity", bench_sensitivity.run),
+        ("fig14_turns", bench_turns.run),
+        ("fig16_ablation", bench_ablation.run),
+        ("table4_overhead", bench_overhead.run),
+        ("table5_rollout", bench_rollout.run),
+        ("beyond_memoryfulness", bench_memoryfulness.run),
+        ("roofline", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    for name, fn in benches:
+        t0 = time.time()
+        try:
+            fn(quick=quick)
+            print(f"bench.{name}.wall_s,{time.time() - t0:.1f},ok")
+        except Exception as e:  # keep the harness running
+            print(f"bench.{name}.wall_s,{time.time() - t0:.1f},FAILED {e!r}")
+            import traceback
+            traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Distributed serving (paper §6.2): a fleet of engines behind the
+session-aware router, vs round-robin; includes straggler mitigation by
+migration.
+
+    PYTHONPATH=src python examples/distributed_router.py
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.configs import get_config
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.profiler import HardwareProfile
+from repro.serving.router import Router
+from repro.sim.runner import run_workload
+from repro.sim.workload import SWE_BENCH, generate_programs
+
+
+def fleet(n, policy):
+    arch = get_config("glm4-9b")
+    return [Engine(arch, EngineConfig(policy=policy, chips=8,
+                                      offload=OffloadConfig(dram_bytes=200e9),
+                                      max_batch=48, kv_budget_bytes=40e9),
+                   HardwareProfile(), engine_id=f"e{i}") for i in range(n)]
+
+
+def main():
+    n, rate = 80, 0.2                                 # 4-engine fleet load
+    print(f"{'setup':<36}{'avg JCT':>10}{'p95':>10}{'TTL hits':>9}")
+    for label, policy, router_policy, thresh in (
+            ("vLLM + round-robin", "vllm", "round_robin", 0.0),
+            ("Continuum + round-robin", "continuum", "round_robin", 0.0),
+            ("Continuum + session-aware", "continuum", "session", 0.0),
+            ("Continuum + session + migration", "continuum", "session", 3.0)):
+        engines = fleet(4, policy)
+        router = Router(engines, policy=router_policy,
+                        migrate_threshold=thresh)
+        programs = generate_programs(SWE_BENCH, n=n, rate_jps=rate, seed=0)
+        s = run_workload(programs, engines, router, max_seconds=1e7)
+        hits = sum(e.scheduler.stats.ttl_hits for e in engines)
+        extra = f"  (migrations={router.migrations})" if thresh else ""
+        print(f"{label:<36}{s.avg_jct:>9.1f}s{s.p95_jct:>9.1f}s{hits:>9}"
+              f"{extra}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,231 @@
+"""Continuum's scheduler (paper Algorithm 1), policy-parameterized.
+
+Owns the waiting queue Q, the TTL map P (pinned programs), and the
+historical tool-call records S (inside the tool handler). The engine calls:
+
+    on_request_arrive(r)      — line 1–5
+    on_request_finish(r)      — line 6–12
+    schedule(now, admit_fn)   — line 13–26 (admission via engine callback)
+
+Memory lives in a :class:`~repro.serving.blocks.BlockManager`; offload
+tiers in an optional :class:`~repro.serving.offload.OffloadManager`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+from repro.core.policies import Policy
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.types import Request, RequestState
+from repro.serving.blocks import BlockManager
+from repro.serving.offload import OffloadManager
+
+
+@dataclasses.dataclass
+class PinEntry:
+    program_id: str
+    request_id: int
+    expiry: float                  # absolute time; math.inf = until return
+    tokens: int                    # cached context tokens
+    pinned_at: float
+
+
+@dataclasses.dataclass
+class SchedulerStats:
+    pins: int = 0
+    ttl_hits: int = 0
+    ttl_expiries: int = 0
+    deadlock_evictions: int = 0
+    preemptions: int = 0
+    offload_reloads: int = 0
+    full_recomputes: int = 0
+
+
+class Scheduler:
+    def __init__(self, policy: Policy, handler: ToolCallHandler,
+                 blocks: BlockManager,
+                 offload: Optional[OffloadManager] = None):
+        self.policy = policy
+        self.handler = handler
+        self.blocks = blocks
+        self.offload = offload
+        self.waiting: list[Request] = []
+        self.pinned: dict[str, PinEntry] = {}          # TTL map P
+        self.attained_service: dict[str, float] = {}   # Autellix PLAS state
+        self.program_turns: dict[str, int] = {}
+        self.stats = SchedulerStats()
+        self.on_evict: Optional[Callable[[str], None]] = None  # backend hook
+
+    # ----------------------------------------------------------- Algorithm 1
+    def on_request_arrive(self, req: Request, now: float) -> None:
+        req.state = RequestState.WAITING
+        self.waiting.append(req)
+        # seen program: close the tool-call interval (S[f] <- duration)
+        self.handler.update_tool_call_time(req.program_id, now)
+        self.program_turns[req.program_id] = req.turn_idx + 1
+
+    def on_request_finish(self, req: Request, now: float) -> dict:
+        """Returns {"pinned": bool, "ttl": float}. Engine already marked the
+        request finished and owns its block allocation."""
+        req.state = RequestState.FINISHED
+        req.finish_time = now
+        tool = self.handler.identify_tool(req)
+        if tool is None:
+            # last request of its program: free KV + any leftover pin
+            self._free_finished(req)
+            self._unpin(req.program_id, reason="program_done")
+            self.handler.on_program_finish(req.program_id,
+                                           self.program_turns.get(req.program_id,
+                                                                  req.turn_idx + 1))
+            return {"pinned": False, "ttl": 0.0}
+
+        self.handler.func_call_finish(tool, now, req.program_id)
+        decision = self.policy.retention(req, tool, self.handler)
+        if decision.ttl > 0:
+            n = self.blocks.pin(req.request_id, req.program_id)
+            self.pinned[req.program_id] = PinEntry(
+                req.program_id, req.request_id, now + decision.ttl,
+                req.prompt_len + req.generated, now)
+            self.stats.pins += 1
+            return {"pinned": True, "ttl": decision.ttl, "blocks": n}
+        self._free_finished(req)
+        return {"pinned": False, "ttl": 0.0}
+
+    def _free_finished(self, req: Request) -> None:
+        self.blocks.free_request(req.request_id)
+        if self.offload is not None:
+            tokens = req.prompt_len + req.generated
+            self.offload.offload(req.program_id, tokens,
+                                 tokens * self._kv_bytes_per_token)
+        if self.on_evict is not None:
+            self.on_evict(req.program_id)
+
+    # engine wires this (depends on model config)
+    _kv_bytes_per_token: float = 0.0
+
+    def unpin_expired(self, now: float) -> None:
+        """Line 15–18: evict pins past TTL unless the program is back in Q."""
+        in_queue = {r.program_id for r in self.waiting}
+        for pid in list(self.pinned):
+            e = self.pinned[pid]
+            if now > e.expiry and pid not in in_queue:
+                self._unpin(pid, reason="ttl_expired")
+                self.stats.ttl_expiries += 1
+
+    def _unpin(self, program_id: str, reason: str) -> int:
+        e = self.pinned.pop(program_id, None)
+        if e is None:
+            return 0
+        n = self.blocks.unpin_free(program_id)
+        if self.offload is not None and n:
+            self.offload.offload(program_id, e.tokens,
+                                 e.tokens * self._kv_bytes_per_token)
+        if self.on_evict is not None:
+            self.on_evict(program_id)
+        return n
+
+    # ------------------------------------------------------------ selection
+    def pick_next(self, now: float) -> Optional[Request]:
+        if not self.waiting:
+            return None
+        pinned_pids = set(self.pinned)
+        key = lambda r: self.policy.priority_key(r, now, pinned_pids,
+                                                 self.attained_service)
+        return min(self.waiting, key=key)
+
+    def admit(self, req: Request, now: float) -> bool:
+        """Try to place `req`'s KV footprint; True if admitted. Accounts for
+        a TTL hit (adopting the program's pinned prefix)."""
+        cached = 0
+        if req.program_id in self.pinned:
+            e = self.pinned[req.program_id]
+            cached = min(e.tokens, req.prompt_len)
+        # vLLM semantics: reserve prompt blocks at admission; decode growth
+        # goes through extend() with preemption on pressure.
+        need = self.blocks.blocks_for_tokens(req.prompt_len - cached)
+        if cached:
+            need = max(0, need - self.blocks.cfg.state_blocks)  # state resident
+        if not self.blocks.can_allocate(need):
+            return False
+        # commit
+        if cached:
+            self.blocks.adopt_pin(req.program_id, req.request_id)
+            del self.pinned[req.program_id]
+            self.stats.ttl_hits += 1
+            req.served_from_pin = True
+            req.cached_prefix = cached
+            req.reload_seconds = 0.0
+        else:
+            entry = self.offload.lookup(req.program_id) if self.offload else None
+            if entry is not None:
+                # reloaded prefix skips prefill compute but pays link time
+                req.reload_seconds = self.offload.reload_seconds(req.program_id)
+                req.cached_prefix = min(entry.tokens, req.prompt_len)
+                self.offload.drop(req.program_id)
+                self.stats.offload_reloads += 1
+            elif req.turn_idx > 0:
+                self.stats.full_recomputes += 1
+        if need:
+            self.blocks.allocate(req.request_id, need)
+        self.waiting.remove(req)
+        req.state = RequestState.RUNNING
+        if req.first_schedule_time < 0:
+            req.first_schedule_time = now
+            req.queueing_delay = now - req.arrival_time
+            # feed T̄: queueing delay of requests whose KV was NOT retained
+            if not req.served_from_pin and req.turn_idx > 0:
+                self.handler.ttl_model.observe_queueing_delay(req.queueing_delay)
+        return True
+
+    def free_victims(self, need_blocks: int, now: float) -> int:
+        """Deadlock prevention (paper §5.2): unpin victims with the latest
+        program arrival time until `need_blocks` fit."""
+        freed = 0
+        # latest program arrival first — approximated by latest pinned_at
+        victims = sorted(self.pinned.values(), key=lambda e: -e.pinned_at)
+        for v in victims:
+            if self.blocks.can_allocate(need_blocks):
+                break
+            freed += self._unpin(v.program_id, reason="deadlock_victim")
+            self.stats.deadlock_evictions += 1
+        return freed
+
+    # ------------------------------------------------------------- schedule
+    def schedule(self, now: float, max_admits: int = 64,
+                 admit_hook: Callable[[Request], None] | None = None) -> list[Request]:
+        """Algorithm 1 Schedule(): admit from Q by priority until memory or
+        queue is exhausted. Returns the admitted requests."""
+        self.unpin_expired(now)
+        admitted: list[Request] = []
+        while self.waiting and len(admitted) < max_admits:
+            req = self.pick_next(now)
+            if req is None:
+                break
+            if not self.admit(req, now):
+                # deadlock prevention: free pinned victims, retry once
+                cached = 0
+                if req.program_id in self.pinned:
+                    cached = min(self.pinned[req.program_id].tokens, req.prompt_len)
+                need = self.blocks.blocks_for_tokens(req.prompt_len - cached)
+                if self.pinned:
+                    self.free_victims(need, now)
+                    if self.admit(req, now):
+                        admitted.append(req)
+                        if admit_hook:
+                            admit_hook(req)
+                        continue
+                break
+            admitted.append(req)
+            if admit_hook:
+                admit_hook(req)
+            # feed M̄ with this request's eventual footprint
+            self.handler.ttl_model.observe_mem_usage(
+                self.blocks.blocks_for_tokens(req.total_len))
+        return admitted
+
+    def note_service(self, program_id: str, seconds: float) -> None:
+        """Autellix PLAS bookkeeping: attained service per program."""
+        self.attained_service[program_id] = \
+            self.attained_service.get(program_id, 0.0) + seconds

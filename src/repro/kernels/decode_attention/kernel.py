@@ -1,0 +1,115 @@
+"""Pallas TPU paged decode attention (vLLM-style block tables).
+
+This is the kernel through which Continuum's TTL-retained KV pages are
+consumed on the next turn: the block table holds *physical* page ids, so a
+TTL hit means the new request's table points at the pinned pages — no
+recompute, no copy.
+
+Scalar-prefetch design: the block table rides as a scalar-prefetch operand
+(``pltpu.PrefetchScalarGridSpec``); each grid step's K/V page is fetched
+from HBM into VMEM by the *index map* reading the table — i.e. the page
+indirection happens in the DMA engine, never in the compute path. Grid
+(B, KV, n_pages) with the page dimension innermost/sequential: online
+softmax accumulates per (batch, kv-head) in VMEM scratch; all G = H/KV
+query heads for that kv-head are processed together (they share the pages)
+— one page read serves G heads (GQA arithmetic-intensity win).
+
+VMEM per step: page (page, D)*2 + q (G, D) + acc (G, D) fp32 ≈
+page=64, D=128, G=16: ~100 KB.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _decode_kernel(tables_ref, lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *, scale: float, page: int,
+                   n_pages: int):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = lens_ref[b]
+    live = ip * page < seq_len
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (page, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (G,page)
+        pos = ip * page + jax.lax.broadcasted_iota(jnp.int32, (1, page), 1)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * jnp.exp(m_prev - m_new)[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def paged_decode_attention_kernel(q, k_pages, v_pages, block_tables, seq_lens,
+                                  *, scale: float | None = None,
+                                  interpret: bool = True):
+    """q (B, H, D); k/v_pages (P, page, KV, D); block_tables (B, n_pages);
+    seq_lens (B,) -> (B, H, D)."""
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    n_pages = block_tables.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+
+    # (B, KV, G, D) so all G query heads of a kv head share one page fetch
+    qr = q.reshape(B, KV, G, D)
+    # pages laid out (KV, P, page, D) so one (page, D) block per grid step
+    kp = jnp.transpose(k_pages, (2, 0, 1, 3))
+    vp = jnp.transpose(v_pages, (2, 0, 1, 3))
+
+    kern = functools.partial(_decode_kernel, scale=scale, page=page,
+                             n_pages=n_pages)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                       # block_tables, seq_lens
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), lambda b, h, ip, tab, lens: (b, h, 0, 0)),
+            # page indirection happens here: the DMA index map reads the table
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, ip, tab, lens: (h, tab[b, ip], 0, 0)),
+            pl.BlockSpec((1, 1, page, D),
+                         lambda b, h, ip, tab, lens: (h, tab[b, ip], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda b, h, ip, tab, lens: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, D), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kern, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, seq_lens, qr, kp, vp)
+    return out.reshape(B, H, D)

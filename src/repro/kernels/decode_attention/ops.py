@@ -1,0 +1,16 @@
+"""Jitted wrapper for the paged decode attention Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention.kernel import paged_decode_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
+                           scale=None, interpret=True):
+    return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
+                                         seq_lens, scale=scale,
+                                         interpret=interpret)

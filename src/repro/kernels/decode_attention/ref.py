@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged GQA decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
+                               *, scale: float | None = None) -> jnp.ndarray:
+    """q (B, H, D); k/v_pages (P, page, KV, D); block_tables (B, max_pages)
+    int32 (physical page per logical block); seq_lens (B,) -> out (B, H, D).
+    """
+    B, H, D = q.shape
+    P, page, KV, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    # gather each sequence's logical KV (B, max_pages*page, KV, D)
+    kg = k_pages[block_tables].reshape(B, max_pages * page, KV, D)
+    vg = v_pages[block_tables].reshape(B, max_pages * page, KV, D)
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bkgd,btkd->bkgt", qg, kg.astype(jnp.float32)) * scale
+    pos = jnp.arange(max_pages * page)
+    mask = pos[None] < seq_lens[:, None]
+    s = jnp.where(mask[:, None, None], s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,btkd->bkgd", p, vg.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)

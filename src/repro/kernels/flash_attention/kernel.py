@@ -1,0 +1,117 @@
+"""Pallas TPU flash attention: causal GQA prefill with softcap + window.
+
+Grid (B, H, nq, nk); the innermost (nk) dimension executes sequentially on
+TPU, so online-softmax statistics accumulate in VMEM scratch across KV
+blocks and the output block is written on the last KV step. Blocks above
+the causal diagonal (or outside the sliding window) are skipped with
+``pl.when`` — the MXU never sees them.
+
+VMEM working set per step: q (bq, D) + k/v (bk, D) + acc (bq, D) fp32 +
+stats — with bq = bk = 512, D = 128: ~1.1 MB, comfortably within the 16 MB
+v5e VMEM; bq/bk stay multiples of 128 for MXU alignment.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, block_q: int, block_k: int, nk: int,
+                  causal: bool, window: int, softcap: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = iq * block_q
+    k_start = ik * block_k
+    # static-shape runtime skip: block is live iff it intersects the mask
+    live = True
+    if causal:
+        live = k_start <= q_start + block_q - 1
+    if window > 0:
+        live = jnp.logical_and(live, k_start + block_k > q_start - window + 1) \
+            if causal else live
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap > 0:
+            s = jnp.tanh(s / softcap) * softcap
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= k_pos <= q_pos
+        if window > 0:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_prev * jnp.exp(m_prev - m_new) + jnp.sum(p, axis=1)
+        acc_scale = jnp.exp(m_prev - m_new)
+        acc_ref[...] = acc_ref[...] * acc_scale[:, None] + \
+            jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+
+    @pl.when(ik == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, scale: float | None = None,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 512,
+                           block_k: int = 512, interpret: bool = True):
+    """q (B, H, S, D); k/v (B, KV, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(D)
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+
+    kern = functools.partial(
+        _flash_kernel, scale=scale, block_q=block_q, block_k=block_k, nk=nk,
+        causal=causal, window=window, softcap=softcap)
+    return pl.pallas_call(
+        kern,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            # online-softmax running stats + fp32 accumulator (VMEM)
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Jitted wrapper for the flash-attention Pallas kernel.
+
+``interpret=True`` on CPU (this container) — the kernel body executes in
+Python for correctness validation; on TPU pass ``interpret=False`` for the
+compiled Mosaic path.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "causal", "window",
+                                             "softcap", "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
+                    softcap=0.0, block_q=512, block_k=512, interpret=True):
+    return flash_attention_kernel(q, k, v, scale=scale, causal=causal,
+                                  window=window, softcap=softcap,
+                                  block_q=block_q, block_k=block_k,
+                                  interpret=interpret)

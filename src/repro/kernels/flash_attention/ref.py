@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for causal GQA flash attention (+softcap, +window)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def flash_attention_ref(q, k, v, *, scale: float | None = None,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q (B, H, S, D); k/v (B, KV, S, D) -> (B, H, S, D). fp32 softmax."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, KV, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg, k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        s = jnp.tanh(s / softcap) * softcap
+    pos = jnp.arange(S)
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= pos[None, :] <= pos[:, None]
+    if window > 0:
+        mask &= pos[None, :] > pos[:, None] - window
+    s = jnp.where(mask, s, -2.0e38)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)

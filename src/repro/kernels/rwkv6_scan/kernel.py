@@ -1,0 +1,113 @@
+"""Pallas TPU RWKV6 WKV kernel: chunked linear attention with per-channel
+data-dependent decay.
+
+Grid (B, H, nc) with the chunk dim innermost/sequential; the (K, V) state
+lives in VMEM scratch across chunks. Within a chunk of L tokens the
+recurrence is reorganized into three MXU matmuls (intra-chunk scores,
+state readout, state update) using mid-chunk-centered decay factorization
+with exponent clipping — identical math to ``repro.models.rwkv6``
+(numerics notes there).
+
+VMEM per step: r/k/v/w chunks (L, K) fp32 + state (K, K) fp32 + (L, L)
+scores — L = 64, K = 64: ~180 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+CLIP = 38.0
+
+
+def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sout_ref,
+                 state_ref, *, L: int, K: int, nc: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = s0_ref[0, 0]
+
+    r = r_ref[0, 0].astype(jnp.float32)          # (L, K)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    lw = lw_ref[0, 0].astype(jnp.float32)        # log decay, <= 0
+    u = u_ref[0].astype(jnp.float32)             # (K,)
+    S = state_ref[...]                           # (K, V)
+
+    cum = jnp.cumsum(lw, axis=0)                 # (L, K)
+    excl = cum - lw
+    total = cum[-1:]                             # (1, K)
+
+    # intra-chunk scores (strictly lower-triangular) + diagonal bonus
+    c_mid = total * 0.5
+    r_f = r * jnp.exp(jnp.clip(excl - c_mid, -CLIP, CLIP))
+    k_f = k * jnp.exp(jnp.clip(c_mid - cum, -CLIP, CLIP))
+    scores = jax.lax.dot_general(r_f, k_f, (((1,), (1,)), ((), ())))  # (L, L)
+    li = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    lj = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    scores = jnp.where(lj < li, scores, 0.0)
+    diag = jnp.sum(r * u[None, :] * k, axis=1)   # (L,)
+    o = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())))
+    o = o + diag[:, None] * v
+
+    # readout against carried-in state
+    r_in = r * jnp.exp(excl)
+    o = o + jax.lax.dot_general(r_in, S, (((1,), (0,)), ((), ())))
+    o_ref[0, 0] = o.astype(o_ref.dtype)
+
+    # state update: S' = diag(exp(total)) S + sum_j k_j exp(total - cum_j) v_j^T
+    k_out = k * jnp.exp(jnp.clip(total - cum, -CLIP, CLIP))
+    S_new = jnp.exp(total).T * S + \
+        jax.lax.dot_general(k_out, v, (((0,), (0,)), ((), ())))
+    state_ref[...] = S_new
+
+    @pl.when(ic == nc - 1)
+    def _final():
+        sout_ref[0, 0] = S_new
+
+
+def rwkv6_scan_kernel(r, k, v, w, u, init_state=None, *, chunk: int = 64,
+                      interpret: bool = True):
+    """r/k/v/w (B, T, H, K); u (H, K); init_state (B, H, K, K) or None.
+    Returns (o (B, T, H, K), final_state (B, H, K, K))."""
+    B, T, H, K = r.shape
+    L = min(chunk, T)
+    assert T % L == 0, (T, L)
+    nc = T // L
+    if init_state is None:
+        init_state = jnp.zeros((B, H, K, K), jnp.float32)
+    logw = jnp.log(jnp.maximum(w.astype(jnp.float32), 1e-38))
+
+    # layout (B, H, nc*L, K) so each grid step reads one (L, K) chunk
+    def to_bh(t):
+        return jnp.transpose(t, (0, 2, 1, 3))
+    rb, kb, vb, lwb = (to_bh(t) for t in (r, k, v, logw))
+
+    kern = functools.partial(_rwkv_kernel, L=L, K=K, nc=nc)
+    o, s_out = pl.pallas_call(
+        kern,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, L, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, L, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, K), lambda b, h, ic: (h, 0)),
+            pl.BlockSpec((1, 1, K, K), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, L, K), lambda b, h, ic: (b, h, ic, 0)),
+            pl.BlockSpec((1, 1, K, K), lambda b, h, ic: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, T, K), r.dtype),
+            jax.ShapeDtypeStruct((B, H, K, K), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((K, K), jnp.float32)],
+        interpret=interpret,
+    )(rb, kb, vb, lwb, u, init_state)
+    return jnp.transpose(o, (0, 2, 1, 3)), s_out

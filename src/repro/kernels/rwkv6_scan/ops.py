@@ -1,0 +1,14 @@
+"""Jitted wrapper for the RWKV6 WKV Pallas kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def rwkv6_scan(r, k, v, w, u, init_state=None, *, chunk=64, interpret=True):
+    return rwkv6_scan_kernel(r, k, v, w, u, init_state, chunk=chunk,
+                             interpret=interpret)

@@ -1,0 +1,28 @@
+"""Pure-jnp sequential oracle for the RWKV6 WKV recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rwkv6_scan_ref(r, k, v, w, u, init_state=None):
+    """Sequential recurrence (ground truth).
+
+    r/k/v (B, T, H, K); w (B, T, H, K) decay in (0,1); u (H, K) bonus;
+    init_state (B, H, K, K) or None. Returns (o (B, T, H, K), final_state).
+
+        o_t = r_t . (S_{t-1} + u * k_t v_t^T);  S_t = w_t * S_{t-1} + k_t v_t^T
+    """
+    B, T, H, K = r.shape
+    S0 = jnp.zeros((B, H, K, K), jnp.float32) if init_state is None else init_state
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        o = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, o
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    S, os = jax.lax.scan(step, S0.astype(jnp.float32), xs)
+    return jnp.moveaxis(os, 0, 1).astype(r.dtype), S

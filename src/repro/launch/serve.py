@@ -1,0 +1,76 @@
+"""Serving launcher: run an agent workload through the Continuum engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch glm4-9b \
+        --policy continuum --workload swe-bench -n 60 --rate 0.05 \
+        [--offload-gb 200] [--trace trace.json] [--engines 2]
+
+Uses the virtual-clock simulation backend (cost-model timed; the scheduler
+code is the production code). For real token generation on CPU see
+examples/quickstart.py.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.configs import get_config
+from repro.core.policies import POLICIES
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.profiler import HardwareProfile
+from repro.serving.router import Router
+from repro.sim.runner import run_workload
+from repro.sim.workload import WORKLOADS, generate_programs, load_trace
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="glm4-9b")
+    ap.add_argument("--policy", default="continuum", choices=list(POLICIES))
+    ap.add_argument("--workload", default="swe-bench",
+                    choices=list(WORKLOADS))
+    ap.add_argument("--trace", help="replay a recorded JSON trace instead")
+    ap.add_argument("-n", type=int, default=60)
+    ap.add_argument("--rate", type=float, default=0.05)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chips", type=int, default=8)
+    ap.add_argument("--engines", type=int, default=1)
+    ap.add_argument("--router", default="session",
+                    choices=("session", "round_robin", "least_loaded"))
+    ap.add_argument("--offload-gb", type=float, default=0.0)
+    ap.add_argument("--kv-budget-gb", type=float, default=40.0)
+    ap.add_argument("--max-batch", type=int, default=48)
+    ap.add_argument("--chunk-size", type=int, default=2048)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.trace:
+        programs = load_trace(args.trace)
+    else:
+        programs = generate_programs(WORKLOADS[args.workload], n=args.n,
+                                     rate_jps=args.rate, seed=args.seed)
+    off = OffloadConfig(dram_bytes=args.offload_gb * 1e9) \
+        if args.offload_gb else None
+    engines = [Engine(cfg, EngineConfig(
+        policy=args.policy, chips=args.chips, offload=off,
+        max_batch=args.max_batch, chunk_size=args.chunk_size,
+        kv_budget_bytes=args.kv_budget_gb * 1e9), HardwareProfile(),
+        engine_id=f"e{i}") for i in range(args.engines)]
+    router = Router(engines, policy=args.router)
+    s = run_workload(programs, engines, router, max_seconds=1e7)
+    st = engines[0].scheduler.stats
+    print(json.dumps({
+        "policy": args.policy, "n_programs": s.n_programs,
+        "avg_jct_s": round(s.avg_jct, 1), "p95_jct_s": round(s.p95_jct, 1),
+        "throughput_jobs_per_min": round(s.throughput_jobs_per_s * 60, 2),
+        "avg_queueing_s": round(s.avg_queueing, 1),
+        "ttl": {"pins": st.pins, "hits": st.ttl_hits,
+                "expiries": st.ttl_expiries,
+                "deadlock_evictions": st.deadlock_evictions},
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,211 @@
+"""Mamba2 (SSD) block: chunked state-space duality form.
+
+TPU adaptation (see DESIGN.md §3): instead of a sequential per-token scan,
+the sequence is split into chunks; intra-chunk terms are dense matmuls
+(MXU-friendly), and inter-chunk state propagation is a log-depth
+``associative_scan`` over per-chunk (decay, state) affine pairs — this keeps
+the sequence dimension parallelizable/shardable.
+
+Layout conventions: x (B, S, D); SSM heads H = expand*D / head_dim; state
+(B, H, P, N) with P = head_dim, N = d_state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import ParamSpec, rms_norm
+
+
+def mamba_dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nheads = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return d_in, nheads, conv_dim
+
+
+def mamba_specs(cfg: ModelConfig, dtype: str) -> dict:
+    s = cfg.ssm
+    D = cfg.d_model
+    d_in, H, conv_dim = mamba_dims(cfg)
+    P, N, G = s.head_dim, s.d_state, s.n_groups
+    return {
+        "wz": ParamSpec((D, H, P), ("embed", "ssm_heads", None), dtype=dtype),
+        "wx": ParamSpec((D, H, P), ("embed", "ssm_heads", None), dtype=dtype),
+        "wB": ParamSpec((D, G, N), ("embed", "ssm_groups", "ssm_state"), dtype=dtype),
+        "wC": ParamSpec((D, G, N), ("embed", "ssm_groups", "ssm_state"), dtype=dtype),
+        "wdt": ParamSpec((D, H), ("embed", "ssm_heads"), dtype=dtype),
+        "conv_w": ParamSpec((s.d_conv, conv_dim), (None, "conv_dim"), init="small",
+                            scale=0.1, dtype=dtype),
+        "conv_b": ParamSpec((conv_dim,), ("conv_dim",), init="zeros", dtype=dtype),
+        "A_log": ParamSpec((H,), ("ssm_heads",), init="zeros", dtype="float32", keep_dtype=True),
+        "D": ParamSpec((H,), ("ssm_heads",), init="ones", dtype="float32", keep_dtype=True),
+        "dt_bias": ParamSpec((H,), ("ssm_heads",), init="zeros", dtype="float32", keep_dtype=True),
+        "norm": ParamSpec((H, P), ("ssm_heads", None), init="zeros", dtype=dtype),
+        "wo": ParamSpec((H, P, D), ("ssm_heads", None, "embed"), dtype=dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None):
+    """Depthwise causal conv. x (B,S,C), w (K,C), state (B,K-1,C) or None.
+    Returns (y (B,S,C), new_state (B,K-1,C))."""
+    K = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else state
+    return y, new_state
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA (..., L) -> (..., L, L) with out[i,j] = sum_{s=j+1..i} dA_s (j<=i)."""
+    c = jnp.cumsum(dA, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    L = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def _affine_scan(decays: jax.Array, states: jax.Array, init_state: jax.Array):
+    """Inclusive scan of S_c = decays_c * S_{c-1} + states_c along axis 0,
+    starting from init_state. decays broadcastable to states."""
+    decays = jnp.concatenate([jnp.ones_like(decays[:1]), decays], axis=0)
+    states = jnp.concatenate([init_state[None].astype(states.dtype), states], axis=0)
+
+    def combine(a, b):
+        da, sa = a
+        db, sb = b
+        return da * db, sb + db * sa
+
+    d, s = jax.lax.associative_scan(combine, (decays, states), axis=0)
+    return s  # s[c] = state after chunk c-1 (s[0] = init)
+
+
+def ssd_chunked(xh, dt, A, Bm, Cm, init_state, chunk: int):
+    """SSD over full sequence.
+
+    xh (B,S,H,P) inputs, dt (B,S,H) (>=0, post-softplus), A (H,) (<0),
+    Bm/Cm (B,S,G,N), init_state (B,H,P,N). Returns (y (B,S,H,P), state)."""
+    B_, S, H, P = xh.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    L = min(chunk, S)
+    S0 = S
+    if S % L:  # pad: dt=0 -> dA=0 (decay 1) and zero input contribution
+        pad = L - S % L
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nc = S // L
+    rep = H // G
+
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * A.astype(f32))                       # (B,S,H), <= 0
+    xbar = xh.astype(f32) * dt.astype(f32)[..., None]           # fold dt into x
+
+    def ch(t, extra=()):  # (B,S,...) -> (B,nc,L,...)
+        return t.reshape((B_, nc, L) + t.shape[2:])
+
+    dAc = ch(dA)                                                # (B,nc,L,H)
+    xc = ch(xbar)                                               # (B,nc,L,H,P)
+    Bc = ch(Bm.astype(f32))                                     # (B,nc,L,G,N)
+    Cc = ch(Cm.astype(f32))
+
+    dAc_h = jnp.moveaxis(dAc, -1, 2)                            # (B,nc,H,L)
+    dAc_h = constrain(dAc_h, "act_batch", None, "ssm_heads", None)
+    seg = _segsum(dAc_h)                                        # (B,nc,H,L,L)
+    decay_ij = jnp.exp(seg)
+    decay_ij = constrain(decay_ij, "act_batch", None, "ssm_heads", None, None)
+
+    # intra-chunk (diagonal) term — keep the repeated B/C head-sharded so the
+    # (L x L) per-head tensors don't replicate across the model axis
+    Bh = jnp.repeat(Bc, rep, axis=3)                            # (B,nc,L,H,N)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+    Bh = constrain(Bh, "act_batch", None, None, "ssm_heads", "ssm_state")
+    Ch = constrain(Ch, "act_batch", None, None, "ssm_heads", "ssm_state")
+    scores = jnp.einsum("bclhn,bcmhn->bchlm", Ch, Bh) * decay_ij
+    scores = constrain(scores, "act_batch", None, "ssm_heads", None, None)
+    y_diag = jnp.einsum("bchlm,bcmhp->bclhp", scores, xc)
+
+    # chunk summary states: contribution of chunk c to the running state
+    cum = jnp.cumsum(dAc_h, axis=-1)                            # (B,nc,H,L)
+    total = cum[..., -1:]                                       # (B,nc,H,1)
+    decay_out = jnp.exp(total - cum)                            # decay token->chunk end
+    states = jnp.einsum("bchl,bclhn,bclhp->bchpn",
+                        decay_out, Bh, xc)                      # (B,nc,H,P,N)
+
+    # inter-chunk: running state before each chunk (associative affine scan)
+    chunk_decay = jnp.exp(total[..., 0])                        # (B,nc,H)
+    d_sc = jnp.moveaxis(chunk_decay, 1, 0)[..., None, None]     # (nc,B,H,1,1)
+    s_sc = jnp.moveaxis(states, 1, 0)                           # (nc,B,H,P,N)
+    run = _affine_scan(d_sc, s_sc, init_state.astype(f32))      # (nc+1,B,H,P,N)
+    prev = jnp.moveaxis(run[:-1], 0, 1)                         # (B,nc,H,P,N)
+    final_state = run[-1]                                       # (B,H,P,N)
+
+    # off-diagonal term: queries against the carried-in state
+    decay_in = jnp.exp(cum)                                     # (B,nc,H,L)
+    y_off = jnp.einsum("bclhn,bchl,bchpn->bclhp", Ch, decay_in, prev)
+
+    y = (y_diag + y_off).reshape(B_, S, H, P)
+    return y[:, :S0], final_state
+
+
+def mamba_apply(p: dict, x: jax.Array, cfg: ModelConfig, state: dict | None,
+                mode: str):
+    """x (B,S,D) -> (B,S,D). state: {"conv": (B,K-1,C), "ssm": (B,H,P,N)}
+    (None to start fresh). mode: "full" (train/prefill) | "decode"."""
+    s = cfg.ssm
+    B_, S, D = x.shape
+    d_in, H, conv_dim = mamba_dims(cfg)
+    P, N, G = s.head_dim, s.d_state, s.n_groups
+
+    z = jnp.einsum("bsd,dhp->bshp", x, p["wz"])
+    xr = jnp.einsum("bsd,dhp->bshp", x, p["wx"]).reshape(B_, S, H * P)
+    Bm = jnp.einsum("bsd,dgn->bsgn", x, p["wB"]).reshape(B_, S, G * N)
+    Cm = jnp.einsum("bsd,dgn->bsgn", x, p["wC"]).reshape(B_, S, G * N)
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+
+    conv_in = jnp.concatenate([xr, Bm, Cm], axis=-1)            # (B,S,conv_dim)
+    conv_state = None if state is None else state["conv"]
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xr = conv_out[..., :H * P].reshape(B_, S, H, P)
+    Bm = conv_out[..., H * P:H * P + G * N].reshape(B_, S, G, N)
+    Cm = conv_out[..., H * P + G * N:].reshape(B_, S, G, N)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+
+    ssm_state = (jnp.zeros((B_, H, P, N), jnp.float32) if state is None
+                 else state["ssm"])
+    if mode == "decode" and S == 1:
+        dA = jnp.exp(dt[:, 0].astype(jnp.float32) * A)          # (B,H)
+        xb = xr[:, 0].astype(jnp.float32) * dt[:, 0][..., None]
+        Bh = jnp.repeat(Bm[:, 0].astype(jnp.float32), H // G, axis=1)
+        Ch = jnp.repeat(Cm[:, 0].astype(jnp.float32), H // G, axis=1)
+        new_ssm = dA[..., None, None] * ssm_state + \
+            jnp.einsum("bhp,bhn->bhpn", xb, Bh)
+        y = jnp.einsum("bhn,bhpn->bhp", Ch, new_ssm)[:, None]   # (B,1,H,P)
+    else:
+        y, new_ssm = ssd_chunked(xr, dt, A, Bm, Cm, ssm_state, s.chunk)
+
+    y = y + xr.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.astype(x.dtype) * jax.nn.silu(z)
+    y = rms_norm(y, p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, p["wo"])
+    return out, {"conv": new_conv, "ssm": new_ssm}
+
+
+def mamba_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    d_in, H, conv_dim = mamba_dims(cfg)
+    s = cfg.ssm
+    return {
+        "conv": ((batch, s.d_conv - 1, conv_dim), cfg.compute_dtype),
+        "ssm": ((batch, H, s.head_dim, s.d_state), "float32"),
+    }

@@ -1,0 +1,22 @@
+"""Dense gated-linear-unit FFN (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamSpec, activation_fn
+
+
+def mlp_specs(d_model: int, d_ff: int, dtype: str) -> dict:
+    return {
+        "w1": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w3": ParamSpec((d_model, d_ff), ("embed", "mlp"), dtype=dtype),
+        "w2": ParamSpec((d_ff, d_model), ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def mlp_apply(p: dict, x: jax.Array, activation: str) -> jax.Array:
+    act = activation_fn(activation)
+    h = act(jnp.einsum("bsd,df->bsf", x, p["w1"])) * jnp.einsum("bsd,df->bsf", x, p["w3"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w2"])

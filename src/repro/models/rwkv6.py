@@ -1,0 +1,207 @@
+"""RWKV-6 (Finch) block: data-dependent per-channel decay linear attention.
+
+Recurrence per head (K = V = head_size):
+    o_t[v] = sum_k r_t[k] * (S_{t-1}[k,v] + u[k] * k_t[k] * v_t[v])
+    S_t[k,v] = w_t[k] * S_{t-1}[k,v] + k_t[k] * v_t[v]
+with w_t = exp(-exp(w0 + lora_w(x_t))) in (0, 1), data-dependent.
+
+Chunked parallel form (TPU adaptation, see DESIGN.md): intra-chunk scores
+use mid-chunk-centered decay factorization with exponent clipping (safe for
+trained decay ranges; see tests for tolerance), inter-chunk state uses the
+same log-depth affine ``associative_scan`` as mamba2. Token-shift state and
+WKV state are carried for serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+from repro.models.common import ParamSpec
+
+LORA_MIX = 32
+LORA_DECAY = 64
+CLIP = 38.0  # exponent clip for factorized intra-chunk decay (fp32-safe)
+
+
+def rwkv_dims(cfg: ModelConfig):
+    K = cfg.rwkv.head_size
+    H = cfg.d_model // K
+    return H, K
+
+
+def rwkv_specs(cfg: ModelConfig, dtype: str) -> dict:
+    D = cfg.d_model
+    H, K = rwkv_dims(cfg)
+    F = cfg.d_ff
+    tm = {
+        # token-shift ddlerp: base mix + 5-way LoRA (w,k,v,r,g)
+        "mix_base": ParamSpec((D,), ("embed",), init="zeros", dtype=dtype),
+        "mix": ParamSpec((5, D), (None, "embed"), init="zeros", dtype=dtype),
+        "mix_w1": ParamSpec((D, 5, LORA_MIX), ("embed", None, None), init="small",
+                            scale=0.1, dtype=dtype),
+        "mix_w2": ParamSpec((5, LORA_MIX, D), (None, None, "embed"), init="small",
+                            scale=0.1, dtype=dtype),
+        # projections, head-structured (B-side sharded on rwkv_v; see DESIGN)
+        "wr": ParamSpec((D, H, K), ("embed", "rwkv_heads", "rwkv_k"), dtype=dtype),
+        "wk": ParamSpec((D, H, K), ("embed", "rwkv_heads", "rwkv_k"), dtype=dtype),
+        "wv": ParamSpec((D, H, K), ("embed", "rwkv_heads", "rwkv_v"), dtype=dtype),
+        "wg": ParamSpec((D, H, K), ("embed", "rwkv_heads", "rwkv_v"), dtype=dtype),
+        "wo": ParamSpec((H, K, D), ("rwkv_heads", "rwkv_v", "embed"), dtype=dtype),
+        # decay: w = exp(-exp(w0 + lora)); bonus u
+        "w0": ParamSpec((H, K), ("rwkv_heads", "rwkv_k"), init="zeros", dtype="float32", keep_dtype=True),
+        "dec_w1": ParamSpec((D, LORA_DECAY), ("embed", None), init="small", scale=0.1, dtype=dtype),
+        "dec_w2": ParamSpec((LORA_DECAY, H, K), (None, "rwkv_heads", "rwkv_k"),
+                            init="small", scale=0.1, dtype=dtype),
+        "u": ParamSpec((H, K), ("rwkv_heads", "rwkv_k"), init="zeros", dtype="float32", keep_dtype=True),
+        "ln_scale": ParamSpec((H, K), ("rwkv_heads", "rwkv_v"), init="zeros", dtype=dtype),
+        "ln_bias": ParamSpec((H, K), ("rwkv_heads", "rwkv_v"), init="zeros", dtype=dtype),
+    }
+    cm = {
+        "mix_k": ParamSpec((D,), ("embed",), init="zeros", dtype=dtype),
+        "mix_r": ParamSpec((D,), ("embed",), init="zeros", dtype=dtype),
+        "wk": ParamSpec((D, F), ("embed", "mlp"), dtype=dtype),
+        "wv": ParamSpec((F, D), ("mlp", "embed"), dtype=dtype),
+        "wr": ParamSpec((D, D), ("embed", "embed_out"), dtype=dtype),
+    }
+    return {"tmix": tm, "cmix": cm}
+
+
+def _token_shift(x: jax.Array, prev: jax.Array | None):
+    """x (B,S,D) -> x_{t-1} (B,S,D); prev (B,D) is the carry-in token."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    shifted = jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def _wkv_chunked(r, k, v, logw, u, init_state, chunk: int):
+    """Chunked WKV. r/k/v (B,S,H,K) fp32, logw (B,S,H,K) (<0), u (H,K),
+    init_state (B,H,K,V). Returns (o (B,S,H,V), state)."""
+    B, S, H, K = r.shape
+    L = min(chunk, S)
+    S0 = S
+    if S % L:  # pad: k=0 contributes nothing, logw=0 means decay 1
+        pad = L - S % L
+        r, k, v = (jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0))) for t in (r, k, v))
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        S += pad
+    nc = S // L
+
+    def ch(t):
+        return t.reshape((B, nc, L) + t.shape[2:])
+
+    rc, kc, vc, lwc = ch(r), ch(k), ch(v), ch(logw)
+    # RWKV heads are not divisible by the model axis; ride the chunk dim
+    # instead so per-chunk fp32 tensors shard over "model" (see DESIGN.md)
+    cax = ("act_batch", "rwkv_chunks", None, None, None)
+    rc, kc, vc, lwc = (constrain(t, *cax) for t in (rc, kc, vc, lwc))
+    # cumulative log decay within chunk; lw_excl[i] = sum_{s<i} logw_s
+    cum = jnp.cumsum(lwc, axis=2)                                # (B,nc,L,H,K)
+    excl = cum - lwc
+
+    # ---- intra-chunk scores: mid-centered factorization with clipping ----
+    c_mid = cum[:, :, -1:] * 0.5                                 # (B,nc,1,H,K)
+    r_f = rc * jnp.exp(jnp.clip(excl - c_mid, -CLIP, CLIP))
+    k_f = kc * jnp.exp(jnp.clip(c_mid - cum, -CLIP, CLIP))
+    scores = jnp.einsum("bclhk,bcmhk->bchlm", r_f, k_f)          # j<i strictly
+    scores = constrain(scores, "act_batch", "rwkv_chunks", None, None, None)
+    tri = jnp.tril(jnp.ones((L, L), bool), k=-1)
+    scores = jnp.where(tri, scores, 0.0)
+    # diagonal (bonus) term
+    diag = jnp.einsum("bclhk,hk,bclhk->bclh", rc, u, kc)
+    o = jnp.einsum("bchlm,bcmhv->bclhv", scores, vc)
+    o = o + diag[..., None] * vc
+
+    # ---- chunk summary states ----
+    decay_out = jnp.exp(jnp.clip(cum[:, :, -1:] - cum, -CLIP, CLIP))
+    states = jnp.einsum("bclhk,bclhv->bchkv", kc * decay_out, vc)  # (B,nc,H,K,V)
+    chunk_decay = jnp.exp(cum[:, :, -1])                          # (B,nc,H,K)
+
+    from repro.models.mamba2 import _affine_scan
+    d_sc = jnp.moveaxis(chunk_decay, 1, 0)[..., None]             # (nc,B,H,K,1)
+    s_sc = jnp.moveaxis(states, 1, 0)                             # (nc,B,H,K,V)
+    run = _affine_scan(d_sc, s_sc, init_state.astype(jnp.float32))
+    prev = jnp.moveaxis(run[:-1], 0, 1)                           # (B,nc,H,K,V)
+    final_state = run[-1]
+
+    # ---- inter-chunk: queries against carried state ----
+    r_in = rc * jnp.exp(excl)                                     # decay since chunk start
+    o = o + jnp.einsum("bclhk,bchkv->bclhv", r_in, prev)
+    return o.reshape(B, S, H, K)[:, :S0], final_state
+
+
+def _group_norm(o: jax.Array, scale: jax.Array, bias: jax.Array, eps: float):
+    """Per-head LayerNorm over the V dim. o (B,S,H,V)."""
+    f = o.astype(jnp.float32)
+    mu = jnp.mean(f, axis=-1, keepdims=True)
+    var = jnp.var(f, axis=-1, keepdims=True)
+    out = (f - mu) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32)) + bias.astype(jnp.float32)).astype(o.dtype)
+
+
+def time_mix_apply(p: dict, x: jax.Array, cfg: ModelConfig, state: dict | None,
+                   mode: str):
+    """RWKV6 attention replacement. state: {"shift": (B,D), "wkv": (B,H,K,V)}."""
+    B, S, D = x.shape
+    H, K = rwkv_dims(cfg)
+    prev = None if state is None else state["shift"]
+    xprev, new_shift = _token_shift(x, prev)
+    dx = xprev - x
+
+    # data-dependent 5-way mix (w,k,v,r,g)
+    base = x + dx * p["mix_base"]
+    lora = jnp.einsum("bsd,dne->bsne", base, p["mix_w1"])
+    lora = jnp.einsum("bsne,ned->bsnd", jnp.tanh(lora), p["mix_w2"])
+    mixes = p["mix"][None, None] + lora                           # (B,S,5,D)
+    xw, xk, xv, xr, xg = [x + dx * mixes[:, :, i] for i in range(5)]
+
+    r = jnp.einsum("bsd,dhk->bshk", xr, p["wr"]).astype(jnp.float32)
+    k = jnp.einsum("bsd,dhk->bshk", xk, p["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", xv, p["wv"]).astype(jnp.float32)
+    g = jax.nn.silu(jnp.einsum("bsd,dhk->bshk", xg, p["wg"]))
+
+    dec = jnp.einsum("bsd,de->bse", xw, p["dec_w1"])
+    dec = jnp.einsum("bse,ehk->bshk", jnp.tanh(dec), p["dec_w2"])
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) + dec.astype(jnp.float32),
+                             -8.0, 1.0))                          # log w in (-e, 0)
+    u = p["u"].astype(jnp.float32)
+
+    wkv0 = (jnp.zeros((B, H, K, K), jnp.float32) if state is None else state["wkv"])
+    if mode == "decode" and S == 1:
+        r1, k1, v1, w1 = r[:, 0], k[:, 0], v[:, 0], jnp.exp(logw[:, 0])
+        kv = jnp.einsum("bhk,bhv->bhkv", k1, v1)
+        o = jnp.einsum("bhk,bhkv->bhv", r1, wkv0 + u[None, :, :, None] * kv)
+        new_wkv = w1[..., None] * wkv0 + kv
+        o = o[:, None]                                            # (B,1,H,V)
+    else:
+        o, new_wkv = _wkv_chunked(r, k, v, logw, u, wkv0, cfg.rwkv.chunk)
+
+    o = _group_norm(o.astype(x.dtype), p["ln_scale"], p["ln_bias"], 64e-5)
+    o = o * g
+    out = jnp.einsum("bshv,hvd->bsd", o, p["wo"])
+    return out, {"shift": new_shift, "wkv": new_wkv}
+
+
+def channel_mix_apply(p: dict, x: jax.Array, cfg: ModelConfig,
+                      state: jax.Array | None, mode: str):
+    """RWKV6 FFN with token shift. state: (B,D) last token."""
+    xprev, new_shift = _token_shift(x, state)
+    dx = xprev - x
+    xk = x + dx * p["mix_k"]
+    xr = x + dx * p["mix_r"]
+    kk = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    kk = jnp.square(jax.nn.relu(kk))
+    vv = jnp.einsum("bsf,fd->bsd", kk, p["wv"])
+    rr = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]))
+    return rr * vv, new_shift
+
+
+def rwkv_state_shapes(cfg: ModelConfig, batch: int) -> dict:
+    H, K = rwkv_dims(cfg)
+    return {
+        "tmix_shift": ((batch, cfg.d_model), cfg.compute_dtype),
+        "wkv": ((batch, H, K, K), "float32"),
+        "cmix_shift": ((batch, cfg.d_model), cfg.compute_dtype),
+    }

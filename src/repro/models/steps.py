@@ -1,0 +1,237 @@
+"""Step builders: jitted, sharded train/prefill/decode steps per (cfg, mesh,
+shape). These are what the dry-run lowers and what launch/train.py and the
+serving backend execute.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (no device allocation), per the multi-pod dry-run contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.dist.sharding import (axis_rules, default_rules, logical_to_spec,
+                                 param_shardings)
+from repro.models.common import abstract_params
+from repro.models.transformer import Model
+from repro.train import optimizer as opt_mod
+
+
+def _batch_sharding(mesh: Mesh, rules: dict, *trailing: Any) -> NamedSharding:
+    spec = logical_to_spec(("act_batch",) + tuple([None] * len(trailing)), rules)
+    return NamedSharding(mesh, spec)
+
+
+def _replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def cache_shardings(model: Model, mesh: Mesh, rules: dict, batch: int, max_len: int):
+    axes = model.cache_logical_axes()
+    shapes = model.cache_shapes(batch, max_len)
+
+    def one(ax, sd):
+        return NamedSharding(mesh, logical_to_spec(ax, rules, shape=sd[0], mesh=mesh))
+
+    return jax.tree.map(one, axes, shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and all(
+                            isinstance(e, (str, type(None))) for e in x))
+
+
+def uses_embeds(cfg: ModelConfig) -> bool:
+    """Audio/VLM archs take precomputed frontend embeddings for prefill."""
+    return cfg.family in ("audio", "vlm")
+
+
+def serve_abstract_params(model: Model, cfg: ModelConfig):
+    """Serving params are stored in the compute dtype (bf16 checkpoints),
+    keep_dtype leaves excepted."""
+    from repro.models.common import spec_tree_map
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    def one(s):
+        dt = jnp.dtype(s.dtype) if s.keep_dtype else cd
+        return jax.ShapeDtypeStruct(s.shape, dt)
+
+    return spec_tree_map(one, model.specs())
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs only — dry-run contract)
+# ---------------------------------------------------------------------------
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+    if shape.kind == "prefill":
+        if uses_embeds(cfg):
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.dtype(cfg.compute_dtype))}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    # decode: one new token against a cache of length S
+    return {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache_len": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class BuiltStep:
+    fn: Any                    # the jitted function
+    in_shardings: Any
+    out_shardings: Any
+    abstract_inputs: tuple     # ShapeDtypeStructs, positional
+    rules: dict
+    donate_argnums: tuple = ()
+
+    def lower(self):
+        return self.fn.lower(*self.abstract_inputs)
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                     adamw: opt_mod.AdamWConfig | None = None,
+                     rules: dict | None = None,
+                     microbatches: int = 0) -> BuiltStep:
+    microbatches = microbatches or cfg.train_microbatches
+    model = Model(cfg)
+    rules = rules or default_rules(cfg, mesh, step_kind="train")
+    adamw = adamw or opt_mod.AdamWConfig(state_dtype=cfg.opt_state_dtype)
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh, rules)
+    o_sh = {"m": p_sh, "v": p_sh, "count": _replicated(mesh)}
+    b_sh = _batch_sharding(mesh, rules, None)
+
+    def train_step(params, opt_state, tokens, labels):
+        with axis_rules(rules):
+            if microbatches > 1:
+                B = tokens.shape[0]
+                mb = B // microbatches
+                tok = tokens.reshape(microbatches, mb, -1)
+                lab = labels.reshape(microbatches, mb, -1)
+
+                def body(acc, xs):
+                    t, l = xs
+                    loss, g = jax.value_and_grad(model.loss)(params, t, l)
+                    acc_loss, acc_g = acc
+                    return (acc_loss + loss,
+                            jax.tree.map(jnp.add, acc_g, g)), None
+
+                zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                      params)
+                (loss, grads), _ = jax.lax.scan(body, (0.0, zero_g), (tok, lab))
+                loss = loss / microbatches
+                grads = jax.tree.map(lambda g: g / microbatches, grads)
+            else:
+                loss, grads = jax.value_and_grad(model.loss)(params, tokens, labels)
+            new_params, new_opt, metrics = opt_mod.apply_updates(
+                params, grads, opt_state, adamw)
+        return new_params, new_opt, {"loss": loss, **metrics}
+
+    in_sh = (p_sh, o_sh, b_sh, b_sh)
+    out_sh = (p_sh, o_sh,
+              {"loss": _replicated(mesh), "grad_norm": _replicated(mesh),
+               "lr": _replicated(mesh)})
+    fn = jax.jit(train_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(0, 1))
+    ins = input_specs(cfg, shape)
+    abstract = (abstract_params(specs),
+                {"m": abstract_params(specs), "v": abstract_params(specs),
+                 "count": jax.ShapeDtypeStruct((), jnp.int32)},
+                ins["tokens"], ins["labels"])
+    # opt-state moments use the configured dtype
+    mdt = jnp.dtype(adamw.state_dtype)
+    abstract = (abstract[0],
+                {"m": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                                   abstract[1]["m"]),
+                 "v": jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt),
+                                   abstract[1]["v"]),
+                 "count": abstract[1]["count"]},
+                abstract[2], abstract[3])
+    return BuiltStep(fn, in_sh, out_sh, abstract, rules, donate_argnums=(0, 1))
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                       rules: dict | None = None,
+                       serve_dtype: str | None = None) -> BuiltStep:
+    """Process the full prompt, build the cache, return the first token."""
+    model = Model(cfg)
+    rules = rules or default_rules(cfg, mesh, step_kind="prefill")
+    B, S = shape.global_batch, shape.seq_len
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh, rules)
+    c_sh = cache_shardings(model, mesh, rules, B, S)
+    b_sh = _batch_sharding(mesh, rules, None)
+
+    embeds_in = uses_embeds(cfg)
+
+    def prefill_step(params, cache, inputs):
+        with axis_rules(rules):
+            logits, new_cache = model.forward(
+                params,
+                tokens=None if embeds_in else inputs,
+                embeds=inputs if embeds_in else None,
+                cache=cache, cache_len=0, mode="prefill", logits_slice=1)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    ins = input_specs(cfg, shape)
+    key = "embeds" if embeds_in else "tokens"
+    in_spec_sh = (_batch_sharding(mesh, rules, None, None)
+                  if embeds_in else _batch_sharding(mesh, rules, None))
+    in_sh = (p_sh, c_sh, in_spec_sh)
+    out_sh = (_batch_sharding(mesh, rules), c_sh)
+    fn = jax.jit(prefill_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    abstract = (serve_abstract_params(model, cfg), model.abstract_cache(B, S),
+                ins[key])
+    return BuiltStep(fn, in_sh, out_sh, abstract, rules, donate_argnums=(1,))
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec,
+                      rules: dict | None = None) -> BuiltStep:
+    """One decode step: new token in, next token + updated cache out."""
+    model = Model(cfg)
+    kind = "decode_long" if shape.global_batch < 8 else "decode"
+    rules = rules or default_rules(cfg, mesh, step_kind=kind)
+    B, S = shape.global_batch, shape.seq_len
+    specs = model.specs()
+    p_sh = param_shardings(specs, mesh, rules)
+    c_sh = cache_shardings(model, mesh, rules, B, S)
+    b_sh = _batch_sharding(mesh, rules)
+
+    def decode_step(params, cache, tokens, cache_len):
+        with axis_rules(rules):
+            logits, new_cache = model.forward(
+                params, tokens=tokens, cache=cache, cache_len=cache_len,
+                mode="decode", logits_slice=1)
+            next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+
+    ins = input_specs(cfg, shape)
+    in_sh = (p_sh, c_sh, _batch_sharding(mesh, rules, None), b_sh)
+    out_sh = (b_sh, c_sh)
+    fn = jax.jit(decode_step, in_shardings=in_sh, out_shardings=out_sh,
+                 donate_argnums=(1,))
+    abstract = (serve_abstract_params(model, cfg), model.abstract_cache(B, S),
+                ins["tokens"], ins["cache_len"])
+    return BuiltStep(fn, in_sh, out_sh, abstract, rules, donate_argnums=(1,))
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, shape: ShapeSpec, **kw) -> BuiltStep:
+    if shape.kind == "train":
+        return build_train_step(cfg, mesh, shape, **kw)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, mesh, shape, **kw)
+    return build_decode_step(cfg, mesh, shape, **kw)

@@ -1,0 +1,98 @@
+"""Paged KV block allocator with TTL pinning (vLLM-style, device-agnostic).
+
+Blocks are the accounting unit for HBM KV memory. Pinning (the paper's core
+mechanism) keeps a finished request's blocks allocated, owned by its
+program, so the program's next turn can *adopt* them and skip prefill.
+
+SSM archs have near-constant per-request state; they use ``state_blocks``
+per request instead of per-token blocks — the same pin/adopt machinery
+applies (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+
+@dataclasses.dataclass
+class BlockConfig:
+    total_blocks: int
+    block_size: int = 16                  # tokens per block
+    state_blocks: int = 0                 # fixed blocks per request (SSM/hybrid)
+    watermark: float = 0.01               # reserve fraction (vLLM-style)
+
+
+class BlockManager:
+    def __init__(self, cfg: BlockConfig):
+        self.cfg = cfg
+        self.total = cfg.total_blocks
+        self.used = 0
+        self.alloc: dict[int, int] = {}            # request_id -> blocks
+        self.pinned: dict[str, int] = {}           # program_id -> blocks
+        self.peak_used = 0
+
+    # ----------------------------------------------------------- accounting
+    def blocks_for_tokens(self, tokens: int) -> int:
+        per_token = math.ceil(max(tokens, 0) / self.cfg.block_size)
+        return per_token + self.cfg.state_blocks
+
+    @property
+    def free(self) -> int:
+        return self.total - self.used
+
+    @property
+    def watermark_blocks(self) -> int:
+        return int(self.total * self.cfg.watermark)
+
+    def can_allocate(self, n: int) -> bool:
+        return n <= self.free - self.watermark_blocks
+
+    def pinned_total(self) -> int:
+        return sum(self.pinned.values())
+
+    # ----------------------------------------------------------- lifecycle
+    def allocate(self, request_id: int, n: int) -> None:
+        assert n <= self.free, (n, self.free)
+        self.alloc[request_id] = self.alloc.get(request_id, 0) + n
+        self.used += n
+        self.peak_used = max(self.peak_used, self.used)
+
+    def extend(self, request_id: int, n: int = 1) -> bool:
+        """Grow a running request (decode); False if OOM."""
+        if n > self.free:
+            return False
+        self.alloc[request_id] += n
+        self.used += n
+        self.peak_used = max(self.peak_used, self.used)
+        return True
+
+    def free_request(self, request_id: int) -> int:
+        n = self.alloc.pop(request_id, 0)
+        self.used -= n
+        return n
+
+    # ------------------------------------------------------------- pinning
+    def pin(self, request_id: int, program_id: str) -> int:
+        """Convert a finished request's allocation into a program pin."""
+        n = self.alloc.pop(request_id, 0)
+        if n:
+            self.pinned[program_id] = self.pinned.get(program_id, 0) + n
+        return n
+
+    def unpin_free(self, program_id: str) -> int:
+        """Release a pin entirely (TTL expiry / deadlock victim)."""
+        n = self.pinned.pop(program_id, 0)
+        self.used -= n
+        return n
+
+    def adopt_pin(self, program_id: str, request_id: int) -> int:
+        """TTL hit: transfer the program's pinned blocks to its new request.
+        Returns the number of blocks adopted (0 = miss)."""
+        n = self.pinned.pop(program_id, 0)
+        if n:
+            self.alloc[request_id] = self.alloc.get(request_id, 0) + n
+        return n
+
+    def utilization(self) -> float:
+        return self.used / max(self.total, 1)

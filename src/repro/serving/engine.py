@@ -1,0 +1,265 @@
+"""Continuous-batching serving engine with chunked prefill and TTL pinning.
+
+One engine == one model replica (one pod/slice). Each ``step(now)`` is one
+engine iteration (Sarathi/vLLM-style): a token budget of chunked prefill
+plus one decode token for every running sequence. The scheduler (Algorithm
+1) decides admission order and KV retention; the execution backend supplies
+the step duration (virtual-clock cost model here, real JAX/TPU execution in
+``backend.JaxBackend``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Protocol
+
+from repro.configs.base import ModelConfig
+from repro.core.policies import make_policy
+from repro.core.scheduler import Scheduler
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.ttl import TTLConfig, TTLModel
+from repro.core.types import ProgramStats, Request, RequestState
+from repro.serving.blocks import BlockConfig, BlockManager
+from repro.serving.offload import OffloadConfig, OffloadManager
+from repro.serving.profiler import (CostModel, HardwareProfile,
+                                    ModelServingProfile, build_profile,
+                                    make_prefill_reload_fn)
+
+
+@dataclasses.dataclass
+class PrefillWork:
+    req: Request
+    chunk: int
+    context: int            # tokens already in place before this chunk
+
+
+class ExecutionBackend(Protocol):
+    def execute(self, prefill: list[PrefillWork], decode: list[Request]) -> float:
+        """Run one engine step; returns its duration in seconds."""
+
+
+class SimBackend:
+    """Virtual-clock backend: step durations from the analytic cost model."""
+
+    def __init__(self, cost: CostModel):
+        self.cost = cost
+
+    def execute(self, prefill: list[PrefillWork], decode: list[Request]) -> float:
+        p_tokens = sum(w.chunk for w in prefill)
+        p_ctx = max((w.context for w in prefill), default=0)
+        d_ctx = (sum(r.prompt_len + r.generated for r in decode) // len(decode)
+                 if decode else 0)
+        return self.cost.step_seconds(p_tokens, p_ctx, len(decode), d_ctx)
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    policy: str = "continuum"
+    max_batch: int = 256                 # max concurrently running sequences
+    chunk_size: int = 2048               # prefill token budget per step
+    block_size: int = 16
+    kv_budget_bytes: float = 0.0         # 0 = derive from HBM minus params
+    chips: int = 1
+    offload: Optional[OffloadConfig] = None
+    ttl: TTLConfig = dataclasses.field(default_factory=TTLConfig)
+    scheduler_overhead_s: float = 0.0    # per-step overhead (Table 4)
+
+
+@dataclasses.dataclass
+class StepEvents:
+    duration: float = 0.0
+    finished: list = dataclasses.field(default_factory=list)
+    tool_started: list = dataclasses.field(default_factory=list)  # (req, tool)
+    admitted: list = dataclasses.field(default_factory=list)
+    idle: bool = False
+
+
+class Engine:
+    def __init__(self, arch: ModelConfig, ecfg: EngineConfig,
+                 hw: HardwareProfile = HardwareProfile(),
+                 backend: ExecutionBackend | None = None,
+                 engine_id: str = "engine0"):
+        self.arch = arch
+        self.ecfg = ecfg
+        self.hw = hw
+        self.engine_id = engine_id
+        self.profile = build_profile(arch, ecfg.chips)
+        self.cost = CostModel(self.profile, hw)
+        self.backend = backend or SimBackend(self.cost)
+
+        # --- KV block pool sizing ---
+        kv_budget = ecfg.kv_budget_bytes or max(
+            hw.hbm_bytes * ecfg.chips * 0.9 - self.profile.param_bytes, 1e9)
+        kvpt = self.profile.kv_bytes_per_token
+        if kvpt > 0:
+            block_bytes = ecfg.block_size * kvpt
+            state_blocks = math.ceil(self.profile.state_bytes / block_bytes) \
+                if self.profile.state_bytes else 0
+        else:  # pure SSM: fixed state per sequence is the unit
+            block_bytes = max(self.profile.state_bytes, 1.0)
+            state_blocks = 1
+        total_blocks = max(int(kv_budget / block_bytes), 64)
+        self.blocks = BlockManager(BlockConfig(total_blocks, ecfg.block_size,
+                                               state_blocks=state_blocks))
+        self.block_bytes = block_bytes
+
+        # --- offload tiers ---
+        self.offload = OffloadManager(ecfg.offload) if ecfg.offload else None
+
+        # --- TTL model + tool handler (profiler-backed PrefillReload) ---
+        coef = self.cost.fit_prefill_quadratic(arch.max_seq_len)
+        reload_fn = make_prefill_reload_fn(
+            self.cost, coef, self.offload is not None, hw.h2d_bw)
+        handler = ToolCallHandler(TTLModel(ecfg.ttl), prefill_reload_fn=reload_fn)
+        self.prefill_coef = coef
+
+        policy = make_policy(ecfg.policy)
+        self.scheduler = Scheduler(policy, handler, self.blocks, self.offload)
+        self.scheduler._kv_bytes_per_token = kvpt if kvpt > 0 else block_bytes
+        if hasattr(self.backend, "drop_program"):
+            self.scheduler.on_evict = self.backend.drop_program
+
+        self.running: list[Request] = []
+        self.programs: dict[str, ProgramStats] = {}
+        self.steps = 0
+        self.busy_seconds = 0.0
+        self.tokens_prefilled = 0
+        self.tokens_decoded = 0
+        self.rejected = 0
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: Request, now: float) -> None:
+        ps = self.programs.get(req.program_id)
+        if ps is None:
+            ps = ProgramStats(req.program_id, req.program_arrival_time)
+            self.programs[req.program_id] = ps
+        ps.num_turns = max(ps.num_turns, req.turn_idx + 1)
+        # fail fast on requests that can never fit (real engines 4xx these)
+        need = self.blocks.blocks_for_tokens(req.total_len)
+        if need > self.blocks.total * (1 - self.blocks.cfg.watermark):
+            req.state = RequestState.FINISHED
+            req.finish_time = now
+            ps.finish_time = now
+            self.rejected += 1
+            return
+        self.scheduler.on_request_arrive(req, now)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.running or self.scheduler.waiting)
+
+    def load(self) -> float:
+        """Routing signal: running + waiting footprint."""
+        return len(self.running) + len(self.scheduler.waiting)
+
+    # ----------------------------------------------------------------- step
+    def step(self, now: float) -> StepEvents:
+        ev = StepEvents()
+        # 1. admission (Algorithm 1 Schedule())
+        cap = self.ecfg.max_batch - len(self.running)
+        if cap > 0:
+            admitted = self.scheduler.schedule(now, max_admits=cap)
+            for r in admitted:
+                r.prefill_pos = r.cached_prefix
+                self.running.append(r)
+            ev.admitted = admitted
+
+        if not self.running:
+            ev.idle = True
+            return ev
+
+        # 2. compose the batch: chunked prefill + decode
+        budget = self.ecfg.chunk_size
+        prefill_work: list[PrefillWork] = []
+        reload_penalty = 0.0
+        for r in self.running:
+            if budget <= 0:
+                break
+            if not r.done_prefill():
+                chunk = min(budget, r.prompt_len - r.prefill_pos)
+                prefill_work.append(PrefillWork(r, chunk, r.prefill_pos))
+                budget -= chunk
+                if r.reload_seconds > 0:
+                    reload_penalty = max(reload_penalty, r.reload_seconds)
+                    r.reload_seconds = 0.0
+
+        decode_reqs = [r for r in self.running
+                       if r.done_prefill() and not r.done()]
+
+        # 3. decode block growth (+ preemption on OOM)
+        for r in list(decode_reqs):
+            pos = r.prompt_len + r.generated
+            if pos % self.ecfg.block_size == 0 and self.profile.kv_bytes_per_token > 0:
+                while not self.blocks.extend(r.request_id, 1):
+                    victim = self._pick_preemption_victim(exclude=r)
+                    if victim is None:
+                        break
+                    self._preempt(victim, now)
+                    if victim in decode_reqs:
+                        decode_reqs.remove(victim)
+
+        # 4. execute
+        dur = self.backend.execute(prefill_work, decode_reqs)
+        dur += reload_penalty + self.ecfg.scheduler_overhead_s
+        ev.duration = dur
+        self.busy_seconds += dur
+        self.steps += 1
+
+        # 5. advance state
+        total_tok = sum(w.chunk for w in prefill_work) + len(decode_reqs) or 1
+        for w in prefill_work:
+            w.req.prefill_pos += w.chunk
+            self.tokens_prefilled += w.chunk
+            if w.req.done_prefill():
+                w.req.generated = max(w.req.generated, 1)  # prefill emits tok 1
+                self.tokens_decoded += 1
+            self.scheduler.note_service(
+                w.req.program_id, dur * w.chunk / total_tok)
+        for r in decode_reqs:
+            r.generated += 1
+            self.tokens_decoded += 1
+            self.scheduler.note_service(r.program_id, dur * 1 / total_tok)
+
+        # 6. completions
+        end = now + dur
+        for r in list(self.running):
+            if r.done_prefill() and r.done():
+                self.running.remove(r)
+                info = self.scheduler.on_request_finish(r, end)
+                ev.finished.append(r)
+                ps = self.programs[r.program_id]
+                ps.total_queueing += r.queueing_delay
+                if r.served_from_pin:
+                    ps.ttl_hits += 1
+                elif r.turn_idx > 0:
+                    ps.ttl_misses += 1
+                if r.is_last_turn or r.tool is None:
+                    ps.finish_time = end
+                else:
+                    ev.tool_started.append((r, r.tool))
+                    ps.total_tool_time += r.tool_duration
+        return ev
+
+    # ------------------------------------------------------------ preemption
+    def _pick_preemption_victim(self, exclude: Request) -> Optional[Request]:
+        cands = [r for r in self.running if r is not exclude]
+        if not cands:
+            return None
+        pinned = set(self.scheduler.pinned)
+        key = lambda r: self.scheduler.policy.priority_key(
+            r, 0.0, pinned, self.scheduler.attained_service)
+        return max(cands, key=key)   # lowest priority = largest key
+
+    def _preempt(self, r: Request, now: float) -> None:
+        self.blocks.free_request(r.request_id)
+        if self.offload is not None:
+            tokens = r.prefill_pos + r.generated
+            self.offload.offload(r.program_id, tokens,
+                                 tokens * self.profile.kv_bytes_per_token)
+        r.state = RequestState.PREEMPTED
+        r.prefill_pos = 0
+        r.cached_prefix = 0
+        r.preemptions += 1
+        self.running.remove(r)
+        self.scheduler.waiting.append(r)
+        self.scheduler.stats.preemptions += 1

@@ -1,0 +1,94 @@
+"""Host-DRAM / SSD KV offload tiers (LMCache-style), as a cost model +
+capacity-tracked store.
+
+When a request's KV is evicted from HBM and offloading is enabled, its
+prefix moves to DRAM (LRU-evicting older entries to SSD, then dropping).
+The program's next turn then *reloads* instead of recomputing. Offload
+writes are asynchronous (LMCache-style non-blocking), so only reload time
+enters the critical path — matching the paper's InferCept+LMCache setup.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Literal, Optional
+
+Tier = Literal["dram", "ssd"]
+
+
+@dataclasses.dataclass
+class OffloadConfig:
+    dram_bytes: float = 100e9            # paper: 100 GB (A100) / 200 GB (H100/B200)
+    ssd_bytes: float = 0.0               # 0 = disabled
+    h2d_bw: float = 25e9                 # host->device link, bytes/s
+    ssd_bw: float = 3e9                  # SSD read, bytes/s
+    enabled: bool = True
+
+
+@dataclasses.dataclass
+class _Entry:
+    program_id: str
+    nbytes: float
+    tokens: int
+    tier: Tier
+
+
+class OffloadManager:
+    """Capacity-tracked two-tier store keyed by program_id."""
+
+    def __init__(self, cfg: OffloadConfig):
+        self.cfg = cfg
+        self.entries: OrderedDict[str, _Entry] = OrderedDict()
+        self.dram_used = 0.0
+        self.ssd_used = 0.0
+
+    def offload(self, program_id: str, tokens: int, nbytes: float) -> None:
+        if not self.cfg.enabled or nbytes <= 0:
+            return
+        self.drop(program_id)
+        while self.dram_used + nbytes > self.cfg.dram_bytes and self._demote_lru():
+            pass
+        if self.dram_used + nbytes <= self.cfg.dram_bytes:
+            self.entries[program_id] = _Entry(program_id, nbytes, tokens, "dram")
+            self.dram_used += nbytes
+            return
+        if self.cfg.ssd_bytes and self.ssd_used + nbytes <= self.cfg.ssd_bytes:
+            self.entries[program_id] = _Entry(program_id, nbytes, tokens, "ssd")
+            self.ssd_used += nbytes
+
+    def _demote_lru(self) -> bool:
+        """Move the least-recently-used DRAM entry to SSD (or drop it)."""
+        for pid, e in self.entries.items():
+            if e.tier == "dram":
+                self.dram_used -= e.nbytes
+                if self.cfg.ssd_bytes and self.ssd_used + e.nbytes <= self.cfg.ssd_bytes:
+                    e.tier = "ssd"
+                    self.ssd_used += e.nbytes
+                else:
+                    del self.entries[pid]
+                return True
+        return False
+
+    def lookup(self, program_id: str) -> Optional[_Entry]:
+        e = self.entries.get(program_id)
+        if e is not None:
+            self.entries.move_to_end(program_id)   # LRU touch
+        return e
+
+    def reload_seconds(self, program_id: str) -> Optional[float]:
+        """Time to bring the program's KV back to HBM; None if absent."""
+        e = self.entries.get(program_id)
+        if e is None:
+            return None
+        bw = self.cfg.h2d_bw if e.tier == "dram" else min(self.cfg.ssd_bw,
+                                                          self.cfg.h2d_bw)
+        return e.nbytes / bw
+
+    def drop(self, program_id: str) -> None:
+        e = self.entries.pop(program_id, None)
+        if e is None:
+            return
+        if e.tier == "dram":
+            self.dram_used -= e.nbytes
+        else:
+            self.ssd_used -= e.nbytes

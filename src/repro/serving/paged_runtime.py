@@ -1,0 +1,177 @@
+"""Paged KV runtime: physical page pools + block tables, decoded through
+the Pallas paged-attention kernel.
+
+This is the layer where Continuum's mechanism is visible at the memory
+system level: a program's KV lives in scattered physical pages; *pinning*
+keeps the pages allocated and the block table alive across the tool-call
+gap, so the next turn decodes against the same physical pages (zero
+recompute, zero copy); *eviction* returns the pages to the free list.
+
+Works for the uniform-attention families (dense/moe/audio/vlm). The
+engine-level BlockManager does the accounting; this runtime holds the
+actual arrays (on TPU: HBM pools consumed by the kernel's scalar-prefetch
+block tables; on CPU: interpret mode).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.decode_attention import paged_decode_attention
+from repro.models import attention as attn_mod
+from repro.models.common import cast_params, rms_norm, take_layer
+from repro.models.mlp import mlp_apply
+from repro.models.transformer import Model
+
+
+@dataclasses.dataclass
+class ProgramEntry:
+    pages: list[int]
+    length: int
+    pinned: bool = False
+
+
+class PagedKVRuntime:
+    def __init__(self, cfg: ModelConfig, n_pages: int = 64,
+                 page_size: int = 16, interpret: bool = True):
+        assert cfg.family in ("dense", "moe", "audio", "vlm") and \
+            not cfg.local_global_alternating, "uniform-attention families"
+        self.cfg = cfg
+        self.model = Model(cfg)
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.interpret = interpret
+        L, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+        dt = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
+        self.k_pages = jnp.zeros((L, n_pages, page_size, KV, Dh), dt)
+        self.v_pages = jnp.zeros((L, n_pages, page_size, KV, Dh), dt)
+        self.free: list[int] = list(range(n_pages))
+        self.programs: dict[str, ProgramEntry] = {}
+        self._last: dict[str, jax.Array] = {}      # last token per program
+
+    # ------------------------------------------------------------- alloc
+    def _ensure_capacity(self, e: ProgramEntry, new_len: int) -> None:
+        need = math.ceil(new_len / self.page_size)
+        while len(e.pages) < need:
+            if not self.free:
+                raise MemoryError("out of KV pages")
+            e.pages.append(self.free.pop())
+
+    def evict(self, program_id: str) -> None:
+        e = self.programs.pop(program_id, None)
+        if e:
+            self.free.extend(e.pages)
+
+    def pin(self, program_id: str) -> None:
+        self.programs[program_id].pinned = True
+
+    def pages_of(self, program_id: str) -> list[int]:
+        return list(self.programs[program_id].pages)
+
+    # ----------------------------------------------------------- prefill
+    def prefill(self, params, program_id: str, tokens: jax.Array) -> None:
+        """Run the model's prefill and scatter the contiguous per-layer KV
+        into this program's (scattered) physical pages."""
+        cfg = self.cfg
+        S = tokens.shape[-1]
+        e = self.programs.setdefault(program_id, ProgramEntry([], 0))
+        start = e.length
+        self._ensure_capacity(e, start + S)
+        cap = len(e.pages) * self.page_size
+        cache = self.model.init_cache(1, max(cap, start + S))
+        if start:
+            # re-materialize existing pages into the contiguous scratch
+            cache = self._gather_into(cache, e)
+        _, cache = self.model.forward(
+            params, tokens=tokens.reshape(1, S), cache=cache,
+            cache_len=jnp.asarray(start, jnp.int32),
+            mode="extend" if start else "prefill", logits_slice=1)
+        self._scatter_from(cache, e, start, S)
+        e.length = start + S
+
+    def _scatter_from(self, cache, e: ProgramEntry, start: int, count: int):
+        """Copy cache[k/v][:, 0, start:start+count] into physical pages."""
+        ps = self.page_size
+        k = cache["k"][:, 0]                       # (L, cap, KV, Dh)
+        v = cache["v"][:, 0]
+        for pos in range(start, start + count, ps):
+            n = min(ps, start + count - pos)
+            pi = e.pages[pos // ps]
+            off = pos % ps                         # 0 by construction
+            kblk = k[:, pos:pos + n].astype(self.k_pages.dtype)
+            vblk = v[:, pos:pos + n].astype(self.v_pages.dtype)
+            self.k_pages = self.k_pages.at[:, pi, off:off + n].set(kblk)
+            self.v_pages = self.v_pages.at[:, pi, off:off + n].set(vblk)
+
+    def _gather_into(self, cache, e: ProgramEntry):
+        ps = self.page_size
+        for i, pi in enumerate(e.pages):
+            n = min(ps, e.length - i * ps)
+            if n <= 0:
+                break
+            cache["k"] = cache["k"].at[:, 0, i * ps:i * ps + n].set(
+                self.k_pages[:, pi, :n].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[:, 0, i * ps:i * ps + n].set(
+                self.v_pages[:, pi, :n].astype(cache["v"].dtype))
+        return cache
+
+    # ------------------------------------------------------------ decode
+    def decode(self, params, program_id: str) -> jax.Array:
+        """One decode step for the program's last token, attention served by
+        the Pallas paged kernel against the (possibly pinned) pages."""
+        cfg = self.cfg
+        e = self.programs[program_id]
+        self._ensure_capacity(e, e.length + 1)
+        tables = jnp.asarray(e.pages, jnp.int32)[None]           # (1, n)
+        # last generated token id is tracked by the caller; here we take the
+        # model's own greedy continuation from the current state:
+        tok = self._last_token(params, program_id)
+        cparams = cast_params(params, self.model.specs(), cfg.compute_dtype)
+        x = cparams["embed"][tok.reshape(1, 1)].astype(cfg.compute_dtype)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        pos = jnp.asarray(e.length, jnp.int32)
+        scale = 1.0 / math.sqrt(cfg.head_dim)
+        L = cfg.num_layers
+        for layer in range(L):
+            p = take_layer(cparams["blocks"], layer)
+            h = rms_norm(x, p["ln1"], cfg.norm_eps)
+            q, k, v = attn_mod.qkv_project(p["attn"], h, cfg, pos[None])
+            # append this token's k/v into the page
+            pi = e.pages[e.length // self.page_size]
+            off = e.length % self.page_size
+            self.k_pages = self.k_pages.at[layer, pi, off].set(
+                k[0, 0].astype(self.k_pages.dtype))
+            self.v_pages = self.v_pages.at[layer, pi, off].set(
+                v[0, 0].astype(self.v_pages.dtype))
+            o = paged_decode_attention(
+                q[:, 0].astype(cfg.compute_dtype),
+                self.k_pages[layer].astype(cfg.compute_dtype),
+                self.v_pages[layer].astype(cfg.compute_dtype),
+                tables, jnp.asarray([e.length + 1], jnp.int32),
+                scale=scale, interpret=self.interpret)
+            a = attn_mod.out_project(p["attn"], o[:, None])
+            x = x + a
+            h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+            if "router" in p["mlp"]:
+                from repro.models.moe import moe_apply
+                x = x + moe_apply(p["mlp"], h2, cfg)
+            else:
+                x = x + mlp_apply(p["mlp"], h2, cfg.activation)
+        x = rms_norm(x, cparams["final_norm"], cfg.norm_eps)
+        head = cparams["embed"].T if cfg.tie_embeddings else cparams["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
+        e.length += 1
+        self._last[program_id] = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        return logits[0, -1]
+
+    def seed_token(self, program_id: str, tok: int) -> None:
+        self._last[program_id] = jnp.asarray(tok, jnp.int32)
+
+    def _last_token(self, params, program_id: str) -> jax.Array:
+        return self._last[program_id]

@@ -1,0 +1,82 @@
+"""Multi-engine routing (paper §6.2 'Real SWE-Agent in Distributed
+Setting'): session-aware routing pins a program to the engine that holds
+its KV state; baselines: round-robin and least-loaded. Includes straggler
+mitigation: a session whose engine is overloaded beyond
+``migrate_threshold``x the fleet median is migrated (losing its cache) —
+bounding the damage of a slow/hot replica.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal, Optional
+
+import numpy as np
+
+from repro.core.types import Program, Request
+
+
+class Router:
+    def __init__(self, engines, policy: Literal["session", "round_robin",
+                                                "least_loaded"] = "session",
+                 migrate_threshold: float = 0.0):
+        self.engines = list(engines)
+        self.policy = policy
+        self.migrate_threshold = migrate_threshold
+        self.session_map: dict[str, int] = {}
+        self._rr = 0
+        self._programs: dict[str, Program] = {}
+        self.migrations = 0
+
+    def register_programs(self, programs: list[Program]) -> None:
+        for p in programs:
+            self._programs[p.program_id] = p
+
+    # ---------------------------------------------------- elastic scaling
+    def add_engine(self, engine) -> None:
+        """Scale up: new replica joins the fleet; new sessions prefer it
+        (least-loaded placement does the rebalancing organically)."""
+        self.engines.append(engine)
+
+    def remove_engine(self, engine_id: str) -> list[str]:
+        """Scale down / node failure: drop the replica and remap its
+        sessions (their KV state is lost — next turns re-prefill or reload,
+        exactly the failure semantics of a real node loss). Returns the
+        remapped program ids."""
+        idx = next(i for i, e in enumerate(self.engines)
+                   if e.engine_id == engine_id)
+        self.engines.pop(idx)
+        remapped = []
+        for pid, i in list(self.session_map.items()):
+            if i == idx:
+                del self.session_map[pid]      # re-placed on next request
+                remapped.append(pid)
+            elif i > idx:
+                self.session_map[pid] = i - 1
+        return remapped
+
+    def program_of(self, program_id: str) -> Optional[Program]:
+        return self._programs.get(program_id)
+
+    def route(self, req: Request):
+        if self.policy == "round_robin":
+            e = self.engines[self._rr % len(self.engines)]
+            self._rr += 1
+            return e
+        if self.policy == "least_loaded":
+            return min(self.engines, key=lambda e: e.load())
+        # session-aware: sticky to the engine holding this program's state
+        idx = self.session_map.get(req.program_id)
+        if idx is None:
+            idx = int(np.argmin([e.load() for e in self.engines]))
+            self.session_map[req.program_id] = idx
+        elif self.migrate_threshold > 0 and len(self.engines) > 1:
+            loads = [e.load() for e in self.engines]
+            others = [l for i, l in enumerate(loads) if i != idx]
+            med = max(float(np.median(others)), 1.0)
+            if loads[idx] > self.migrate_threshold * med:
+                new_idx = int(np.argmin(loads))
+                if new_idx != idx:
+                    self.session_map[req.program_id] = new_idx
+                    self.migrations += 1
+                    idx = new_idx
+        return self.engines[idx]

@@ -1,0 +1,64 @@
+"""Gradient compression with error feedback (distributed-optimization
+trick for DCN-limited multi-pod training).
+
+int8 block-quantized all-reduce emulation: gradients are quantized to int8
+with per-block scales before the (pod-axis) reduction and dequantized
+after; the quantization residual is carried in an error-feedback buffer so
+the compression is unbiased over time (1-bit-Adam / EF-SGD lineage).
+
+In-graph (pure function of (grads, error_state)) so it composes with the
+jitted train step; the multi-pod speedup shows up in the roofline's
+collective term (DCN bytes /4 for the pod-axis reduction).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    block: int = 256
+    enabled: bool = True
+
+
+def init_error_state(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def _quantize_dequantize(x: jnp.ndarray, block: int):
+    """Per-block int8 symmetric quantization; returns (dq, residual)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % block
+    fp = jnp.pad(flat, (0, pad)).reshape(-1, block)
+    scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(fp / scale), -127, 127).astype(jnp.int8)
+    dq = (q.astype(jnp.float32) * scale).reshape(-1)[:n].reshape(x.shape)
+    return dq, x - dq
+
+
+def compress_grads(grads, error_state, cfg: CompressionConfig = CompressionConfig()):
+    """grads + carried error -> (compressed-view grads, new error state).
+
+    Apply BEFORE the optimizer (and conceptually before the cross-pod
+    reduction; under pjit the all-reduce of the dequantized values is what
+    XLA sees — the int8 wire format is the TPU runtime's concern, and the
+    *numerics* here match what the wire format would produce)."""
+    if not cfg.enabled:
+        return grads, error_state
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        dq, resid = _quantize_dequantize(corrected, cfg.block)
+        return dq.astype(g.dtype), resid
+
+    out = jax.tree.map(one, grads, error_state)
+    new_g = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_e = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_e

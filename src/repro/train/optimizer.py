@@ -1,0 +1,91 @@
+"""AdamW + schedules, pure-JAX (no optax dependency by design).
+
+State is a pytree {"m": tree, "v": tree, "count": scalar}; m/v dtype is
+configurable per model (``cfg.opt_state_dtype``) — the 235B MoE config uses
+bf16 moments to fit the 16 GB/chip budget (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    schedule: str = "cosine"       # "cosine" | "constant" | "linear"
+    state_dtype: str = "float32"
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - frac
+    else:  # cosine
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def init_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig,
+                  transform_grads: Callable | None = None):
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.grad_clip > 0 else 1.0
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+    if transform_grads is not None:
+        grads = transform_grads(grads)
+
+    lr = schedule_lr(cfg, count)
+    c = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** c
+    bc2 = 1.0 - cfg.b2 ** c
+
+    def upd(p, g, m, v):
+        mf, vf = m.astype(jnp.float32), v.astype(jnp.float32)
+        m2 = cfg.b1 * mf + (1 - cfg.b1) * g
+        v2 = cfg.b2 * vf + (1 - cfg.b2) * jnp.square(g)
+        mhat = m2 / bc1
+        vhat = v2 / bc2
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (step + wd)
+        return (newp.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,79 @@
+"""Block allocator invariants, incl. hypothesis state-machine-ish sweep."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.blocks import BlockConfig, BlockManager
+
+
+def make(total=100, block_size=16, state_blocks=0):
+    return BlockManager(BlockConfig(total, block_size, state_blocks=state_blocks))
+
+
+class TestBasics:
+    def test_blocks_for_tokens(self):
+        m = make()
+        assert m.blocks_for_tokens(0) == 0
+        assert m.blocks_for_tokens(1) == 1
+        assert m.blocks_for_tokens(16) == 1
+        assert m.blocks_for_tokens(17) == 2
+
+    def test_state_blocks_added(self):
+        m = make(state_blocks=2)
+        assert m.blocks_for_tokens(0) == 2
+        assert m.blocks_for_tokens(16) == 3
+
+    def test_alloc_free_roundtrip(self):
+        m = make()
+        m.allocate(1, 10)
+        assert m.free == 90
+        assert m.free_request(1) == 10
+        assert m.free == 100
+
+    def test_pin_adopt(self):
+        m = make()
+        m.allocate(1, 10)
+        assert m.pin(1, "prog") == 10
+        assert m.used == 10 and m.pinned["prog"] == 10
+        assert m.adopt_pin("prog", 2) == 10
+        assert m.alloc[2] == 10 and not m.pinned
+
+    def test_pin_expiry_frees(self):
+        m = make()
+        m.allocate(1, 10)
+        m.pin(1, "prog")
+        assert m.unpin_free("prog") == 10
+        assert m.used == 0
+
+    def test_watermark(self):
+        m = make(total=100)
+        m.cfg = BlockConfig(100, 16, watermark=0.1)
+        assert m.can_allocate(90)
+        assert not m.can_allocate(91)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "pin", "adopt",
+                                           "unpin", "extend"]),
+                          st.integers(0, 9), st.integers(1, 30)),
+                max_size=60))
+def test_never_leaks_or_goes_negative(ops):
+    m = make(total=200)
+    for op, rid, n in ops:
+        pid = f"p{rid}"
+        if op == "alloc" and m.can_allocate(n):
+            m.allocate(rid, n)
+        elif op == "free":
+            m.free_request(rid)
+        elif op == "pin" and rid in m.alloc:
+            m.pin(rid, pid)
+        elif op == "adopt" and pid in m.pinned:
+            m.adopt_pin(pid, rid)
+        elif op == "unpin":
+            m.unpin_free(pid)
+        elif op == "extend" and rid in m.alloc:
+            m.extend(rid, n)
+        # invariants
+        assert 0 <= m.used <= m.total
+        assert m.used == sum(m.alloc.values()) + sum(m.pinned.values())
+        assert all(v >= 0 for v in m.alloc.values())
+        assert all(v > 0 for v in m.pinned.values())

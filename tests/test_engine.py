@@ -1,0 +1,89 @@
+"""Engine + simulator end-to-end behaviors (virtual clock)."""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.profiler import HardwareProfile
+from repro.sim.runner import run_workload
+from repro.sim.workload import SWE_BENCH, generate_programs
+
+
+def run(policy, n=20, rate=0.1, offload=None, kv_budget=10e9, seed=0,
+        arch="qwen2-1.5b", chips=4):
+    cfg = get_config(arch)
+    programs = generate_programs(SWE_BENCH, n=n, rate_jps=rate, seed=seed)
+    ecfg = EngineConfig(policy=policy, chips=chips, offload=offload,
+                        max_batch=32, chunk_size=2048,
+                        kv_budget_bytes=kv_budget)
+    eng = Engine(cfg, ecfg, HardwareProfile())
+    summary = run_workload(programs, [eng], max_seconds=1e6)
+    return summary, eng
+
+
+class TestEndToEnd:
+    def test_all_programs_complete(self):
+        s, eng = run("continuum")
+        assert s.n_programs == 20
+        assert s.avg_jct > 0 and s.makespan > 0
+        assert eng.blocks.used == eng.blocks.pinned_total()  # only pins remain
+
+    def test_continuum_beats_vllm_in_contention(self):
+        sv, _ = run("vllm", n=30, rate=0.08, kv_budget=6e9)
+        sc, ec = run("continuum", n=30, rate=0.08, kv_budget=6e9)
+        assert sc.avg_jct < sv.avg_jct
+        assert ec.scheduler.stats.ttl_hits > 0
+
+    def test_offload_reduces_jct_for_vllm(self):
+        s0, _ = run("vllm", n=15)
+        s1, _ = run("vllm", n=15, offload=OffloadConfig(dram_bytes=100e9))
+        assert s1.avg_jct < s0.avg_jct               # reload beats recompute
+
+    def test_no_retention_policies_never_pin(self):
+        for p in ("vllm", "autellix", "fcfs_program"):
+            _, eng = run(p, n=10)
+            assert eng.scheduler.stats.pins == 0
+
+    def test_preemption_under_extreme_pressure(self):
+        s, eng = run("vllm", n=12, rate=0.5, kv_budget=2.5e9)
+        assert s.n_programs == 12                    # still completes
+        assert eng.scheduler.stats.preemptions > 0
+
+    def test_oversized_requests_rejected_not_livelocked(self):
+        s, eng = run("vllm", n=6, rate=0.5, kv_budget=0.3e9)
+        assert eng.rejected > 0                      # 4xx'd, no hang
+
+    def test_deterministic_given_seed(self):
+        s1, _ = run("continuum", n=10, seed=3)
+        s2, _ = run("continuum", n=10, seed=3)
+        assert s1.avg_jct == pytest.approx(s2.avg_jct)
+
+    def test_ssm_arch_serves(self):
+        """RWKV6: constant-size state, state_blocks accounting path."""
+        s, eng = run("continuum", n=8, arch="rwkv6-3b")
+        assert s.n_programs == 8
+        assert eng.blocks.cfg.state_blocks >= 1
+
+    def test_scheduler_overhead_accounted(self):
+        cfg = get_config("qwen2-1.5b")
+        programs = generate_programs(SWE_BENCH, n=5, rate_jps=0.1, seed=0)
+        base = EngineConfig(policy="continuum", chips=4, kv_budget_bytes=10e9)
+        slow = EngineConfig(policy="continuum", chips=4, kv_budget_bytes=10e9,
+                            scheduler_overhead_s=0.01)
+        e0 = Engine(cfg, base, HardwareProfile())
+        e1 = Engine(cfg, slow, HardwareProfile())
+        s0 = run_workload(programs, [e0], max_seconds=1e6)
+        s1 = run_workload(programs, [e1], max_seconds=1e6)
+        assert s1.avg_jct > s0.avg_jct
+
+
+class TestTTLDynamics:
+    def test_hits_accumulate_over_turns(self):
+        s, eng = run("continuum", n=25, rate=0.05)
+        st = eng.scheduler.stats
+        assert st.pins > 0
+        assert st.ttl_hits + st.ttl_expiries + st.deadlock_evictions > 0
+
+    def test_infercept_pins_unbounded(self):
+        _, eng = run("infercept", n=15, rate=0.05)
+        assert eng.scheduler.stats.ttl_expiries == 0   # no TTL bound

@@ -1,0 +1,80 @@
+"""Hypothesis property tests: system invariants of the serving engine
+under randomized agent workloads and policies."""
+import dataclasses
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.core.types import Turn, Program
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.profiler import HardwareProfile
+from repro.sim.runner import run_workload
+
+
+def random_programs(draw):
+    n = draw(st.integers(3, 10))
+    programs = []
+    t = 0.0
+    for i in range(n):
+        t += draw(st.floats(0.1, 30.0))
+        n_turns = draw(st.integers(1, 6))
+        turns = []
+        for k in range(n_turns):
+            last = k == n_turns - 1
+            turns.append(Turn(
+                new_tokens=draw(st.integers(16, 4000)),
+                output_tokens=draw(st.integers(8, 400)),
+                tool=None if last else draw(st.sampled_from(
+                    ["ls", "grep", "pytest", "web"])),
+                tool_duration=0.0 if last else draw(st.floats(0.01, 60.0)),
+            ))
+        programs.append(Program(f"p{i}", t, turns))
+    return programs
+
+
+@st.composite
+def workloads(draw):
+    return random_programs(draw)
+
+
+@settings(max_examples=15, deadline=None)
+@given(workloads(),
+       st.sampled_from(["vllm", "autellix", "infercept", "continuum"]),
+       st.booleans())
+def test_engine_invariants(programs, policy, offload):
+    cfg = get_config("qwen2-1.5b")
+    off = OffloadConfig(dram_bytes=50e9) if offload else None
+    eng = Engine(cfg, EngineConfig(policy=policy, chips=4, offload=off,
+                                   max_batch=16, chunk_size=1024,
+                                   kv_budget_bytes=8e9), HardwareProfile())
+    s = run_workload(programs, [eng], max_seconds=1e7)
+
+    # 1. every non-rejected program completes with consistent timestamps
+    finished = [p for p in eng.programs.values() if p.finish_time >= 0]
+    assert len(finished) + eng.rejected >= len(programs)
+    for p in finished:
+        assert p.finish_time >= p.arrival_time
+
+    # 2. block accounting: only pinned blocks may remain allocated
+    assert eng.blocks.used == eng.blocks.pinned_total()
+    assert 0 <= eng.blocks.used <= eng.blocks.total
+    assert eng.blocks.peak_used <= eng.blocks.total
+
+    # 3. scheduler drained
+    assert not eng.running and not eng.scheduler.waiting
+
+    # 4. JCT lower bound: tool time is inside every program's JCT
+    for p in finished:
+        assert p.jct >= p.total_tool_time * 0.999
+
+    # 5. retention discipline: non-retaining policies never pin
+    if policy in ("vllm", "autellix"):
+        assert eng.scheduler.stats.pins == 0
+
+    # 6. token accounting: every completed turn decoded its output budget
+    if not eng.rejected and not eng.scheduler.stats.preemptions:
+        expect = sum(t.output_tokens for pr in programs for t in pr.turns)
+        assert eng.tokens_decoded >= expect
+    assert s.makespan > 0

@@ -1,0 +1,133 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import (paged_decode_attention,
+                                            paged_decode_attention_ref)
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.rwkv6_scan import rwkv6_scan, rwkv6_scan_ref
+
+RNG = jax.random.PRNGKey(7)
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,H,KV,S,D", [
+        (2, 4, 2, 256, 64), (1, 8, 8, 128, 128), (2, 2, 1, 512, 64),
+        (1, 4, 4, 256, 80),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_sweep(self, B, H, KV, S, D, dtype):
+        ks = jax.random.split(RNG, 3)
+        q = jax.random.normal(ks[0], (B, H, S, D)).astype(dtype)
+        k = jax.random.normal(ks[1], (B, KV, S, D)).astype(dtype)
+        v = jax.random.normal(ks[2], (B, KV, S, D)).astype(dtype)
+        out = flash_attention(q, k, v, block_q=128, block_k=128)
+        ref = flash_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **tol_for(dtype))
+
+    @pytest.mark.parametrize("window,softcap", [(64, 0.0), (0, 30.0),
+                                                (128, 50.0)])
+    def test_window_and_softcap(self, window, softcap):
+        B, H, KV, S, D = 1, 4, 2, 256, 64
+        ks = jax.random.split(RNG, 3)
+        q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KV, S, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KV, S, D), jnp.float32)
+        out = flash_attention(q, k, v, window=window, softcap=softcap,
+                              block_q=64, block_k=64)
+        ref = flash_attention_ref(q, k, v, window=window, softcap=softcap)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+
+class TestPagedDecode:
+    @pytest.mark.parametrize("B,H,KV,D,page,npages", [
+        (2, 8, 2, 64, 16, 8), (3, 4, 4, 128, 32, 4), (1, 16, 1, 64, 64, 2),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_sweep(self, B, H, KV, D, page, npages, dtype):
+        P = npages * B + 8
+        ks = jax.random.split(RNG, 4)
+        q = jax.random.normal(ks[0], (B, H, D)).astype(dtype)
+        kp = jax.random.normal(ks[1], (P, page, KV, D)).astype(dtype)
+        vp = jax.random.normal(ks[2], (P, page, KV, D)).astype(dtype)
+        tabs = jnp.stack([jax.random.permutation(jax.random.fold_in(ks[3], b),
+                                                 P)[:npages]
+                          for b in range(B)]).astype(jnp.int32)
+        lens = jax.random.randint(jax.random.fold_in(RNG, 9), (B,), 1,
+                                  npages * page + 1).astype(jnp.int32)
+        out = paged_decode_attention(q, kp, vp, tabs, lens)
+        ref = paged_decode_attention_ref(q, kp, vp, tabs, lens)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **tol_for(dtype))
+
+    def test_ttl_hit_reuses_physical_pages(self):
+        """Continuum semantics: a returning turn whose pages were pinned
+        passes the same physical page ids — attention must match a fresh
+        contiguous layout exactly."""
+        B, H, KV, D, page = 1, 4, 2, 64, 16
+        P = 16
+        ks = jax.random.split(RNG, 3)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        kp = jax.random.normal(ks[1], (P, page, KV, D), jnp.float32)
+        vp = jax.random.normal(ks[2], (P, page, KV, D), jnp.float32)
+        scattered = jnp.array([[7, 3, 11, 0]], jnp.int32)   # pinned pages
+        lens = jnp.array([64], jnp.int32)
+        out_pinned = paged_decode_attention(q, kp, vp, scattered, lens)
+        # contiguous copy of the same logical KV
+        kc = kp[scattered[0]][None].reshape(1, 4 * page, KV, D)
+        kp2 = jnp.concatenate([kc.reshape(4, page, KV, D), kp[4:]], 0)
+        vc = vp[scattered[0]][None].reshape(1, 4 * page, KV, D)
+        vp2 = jnp.concatenate([vc.reshape(4, page, KV, D), vp[4:]], 0)
+        out_fresh = paged_decode_attention(q, kp2, vp2,
+                                           jnp.array([[0, 1, 2, 3]], jnp.int32),
+                                           lens)
+        np.testing.assert_allclose(np.asarray(out_pinned),
+                                   np.asarray(out_fresh), atol=1e-6)
+
+
+class TestRWKV6Scan:
+    @pytest.mark.parametrize("B,T,H,K,chunk", [
+        (2, 128, 2, 32, 32), (1, 256, 4, 64, 64), (2, 96, 2, 16, 32),
+    ])
+    def test_sweep(self, B, T, H, K, chunk):
+        ks = jax.random.split(RNG, 5)
+        r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+        k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+        v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) - 2.0))
+        u = jax.random.normal(ks[4], (H, K)) * 0.3
+        s0 = jax.random.normal(RNG, (B, H, K, K)) * 0.1
+        o, sf = rwkv6_scan(r, k, v, w, u, s0, chunk=chunk)
+        oref, sref = rwkv6_scan_ref(r, k, v, w, u, s0)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(oref),
+                                   rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(sf), np.asarray(sref),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_state_continuity_across_calls(self):
+        """Chunked serving: two calls with carried state == one call."""
+        B, T, H, K = 1, 64, 2, 16
+        ks = jax.random.split(RNG, 5)
+        r = jax.random.normal(ks[0], (B, T, H, K)) * 0.5
+        k = jax.random.normal(ks[1], (B, T, H, K)) * 0.5
+        v = jax.random.normal(ks[2], (B, T, H, K)) * 0.5
+        w = jnp.exp(-jnp.exp(jax.random.normal(ks[3], (B, T, H, K)) - 2.0))
+        u = jax.random.normal(ks[4], (H, K)) * 0.3
+        o_full, s_full = rwkv6_scan(r, k, v, w, u, chunk=32)
+        o1, s1 = rwkv6_scan(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u,
+                            chunk=32)
+        o2, s2 = rwkv6_scan(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:], u, s1,
+                            chunk=32)
+        np.testing.assert_allclose(np.asarray(jnp.concatenate([o1, o2], 1)),
+                                   np.asarray(o_full), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                                   rtol=1e-4, atol=1e-4)

@@ -1,0 +1,129 @@
+"""Multi-engine routing: session affinity, load balance, straggler move."""
+import pytest
+
+from repro.configs import get_config
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.profiler import HardwareProfile
+from repro.serving.router import Router
+from repro.sim.runner import run_workload
+from repro.sim.workload import BFCL, generate_programs
+
+
+def make_engines(n, policy="continuum"):
+    cfg = get_config("qwen2-1.5b")
+    return [Engine(cfg, EngineConfig(policy=policy, chips=4,
+                                     kv_budget_bytes=10e9),
+                   HardwareProfile(), engine_id=f"e{i}") for i in range(n)]
+
+
+class TestRouter:
+    def test_session_affinity(self):
+        engines = make_engines(2)
+        r = Router(engines, policy="session")
+        from repro.core.types import Request
+        q1 = Request("pA", 0, 100, 10, 0.0, 0.0)
+        e1 = r.route(q1)
+        q2 = Request("pA", 1, 200, 10, 5.0, 0.0)
+        assert r.route(q2) is e1                      # sticky
+
+    def test_round_robin_spreads(self):
+        engines = make_engines(3)
+        r = Router(engines, policy="round_robin")
+        from repro.core.types import Request
+        seen = {r.route(Request(f"p{i}", 0, 10, 1, 0.0, 0.0)).engine_id
+                for i in range(3)}
+        assert len(seen) == 3
+
+    def test_multi_engine_run_improves_jct(self):
+        programs = generate_programs(BFCL, n=24, rate_jps=0.2, seed=1)
+        s1 = run_workload(programs, make_engines(1), max_seconds=1e6)
+        programs = generate_programs(BFCL, n=24, rate_jps=0.2, seed=1)
+        s2 = run_workload(programs, make_engines(2), max_seconds=1e6)
+        assert s2.n_programs == 24
+        assert s2.avg_jct <= s1.avg_jct * 1.05
+
+    def test_straggler_migration(self):
+        engines = make_engines(2)
+        r = Router(engines, policy="session", migrate_threshold=2.0)
+        from repro.core.types import Request
+        q = Request("pA", 0, 100, 10, 0.0, 0.0)
+        e = r.route(q)
+        # overload pA's engine artificially
+        for i in range(50):
+            e.submit(Request(f"x{i}", 0, 100, 10, 0.0, 0.0), 0.0)
+        q2 = Request("pA", 1, 200, 10, 5.0, 0.0)
+        e2 = r.route(q2)
+        assert e2 is not e and r.migrations == 1
+
+
+class TestElasticFleet:
+    def test_scale_up_spreads_new_sessions(self):
+        from repro.core.types import Request
+        engines = make_engines(1)
+        r = Router(engines, policy="session")
+        for i in range(6):
+            e = r.route(Request(f"w{i}", 0, 100, 10, 0.0, 0.0))
+            e.submit(Request(f"w{i}", 0, 100, 10, 0.0, 0.0), 0.0)
+        r.add_engine(make_engines(1)[0])
+        e_new = r.route(Request("fresh", 0, 100, 10, 1.0, 1.0))
+        assert e_new is r.engines[1]            # least-loaded placement
+
+    def test_node_failure_remaps_sessions(self):
+        from repro.core.types import Request
+        engines = make_engines(3)
+        r = Router(engines, policy="session")
+        # pin sessions across engines
+        pids = [f"p{i}" for i in range(6)]
+        homes = {}
+        for pid in pids:
+            q = Request(pid, 0, 100, 10, 0.0, 0.0)
+            e = r.route(q)
+            e.submit(q, 0.0)
+            homes[pid] = e.engine_id
+        dead = engines[1].engine_id
+        lost = r.remove_engine(dead)
+        assert set(lost) == {p for p, h in homes.items() if h == dead}
+        # surviving sessions keep their homes; lost ones get re-placed
+        for pid in pids:
+            q = Request(pid, 1, 200, 10, 5.0, 0.0)
+            e = r.route(q)
+            assert e.engine_id != dead
+            if pid not in lost:
+                assert e.engine_id == homes[pid]
+
+    def test_fleet_survives_failure_mid_run(self):
+        """End-to-end: kill an engine mid-workload; every program still
+        completes (lost sessions re-prefill on a survivor)."""
+        from repro.sim.runner import Simulator
+        from repro.sim.workload import BFCL, generate_programs
+        engines = make_engines(3)
+        r = Router(engines, policy="session")
+        programs = generate_programs(BFCL, n=18, rate_jps=0.5, seed=7)
+        r.register_programs(programs)
+        sim = Simulator(engines, r, max_seconds=1e6)
+        sim.add_programs(programs)
+        # run a while, then fail engine 1 and move its in-flight requests
+        for _ in range(40):
+            sim._deliver_arrivals()
+            for e in list(engines):
+                if e.has_work:
+                    ev = e.step(sim.now)
+                    sim._handle_events(e, ev, sim.now + ev.duration)
+            sim.now += 0.5
+        victim = engines[1]
+        moved = r.remove_engine(victim.engine_id)
+        for req in list(victim.running) + list(victim.scheduler.waiting):
+            req.prefill_pos = 0
+            req.cached_prefix = 0
+            req.state = __import__("repro.core.types",
+                                   fromlist=["RequestState"]).RequestState.WAITING
+            r.route(req).submit(req, sim.now)
+        sim.engines = [e for e in sim.engines if e is not victim]
+        sim._engine_ready.pop(victim.engine_id, None)
+        summary = sim.run()
+        done = sum(1 for e in sim.engines for p in e.programs.values()
+                   if p.finish_time >= 0)
+        # victim's already-finished programs aren't recounted; everything
+        # still in flight completes on survivors
+        assert done + sum(1 for p in victim.programs.values()
+                          if p.finish_time >= 0) >= 18

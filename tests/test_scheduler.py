@@ -1,0 +1,162 @@
+"""Scheduler behaviors (paper Algorithm 1 + §5.2)."""
+import math
+
+import pytest
+
+from repro.core.policies import make_policy
+from repro.core.scheduler import Scheduler
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.ttl import TTLConfig, TTLModel
+from repro.core.types import Request, RequestState
+from repro.serving.blocks import BlockConfig, BlockManager
+
+
+def make_sched(policy="continuum", total_blocks=1000, reload_s=5.0, **ttl_kw):
+    handler = ToolCallHandler(TTLModel(TTLConfig(**ttl_kw)),
+                              prefill_reload_fn=lambda r: reload_s)
+    blocks = BlockManager(BlockConfig(total_blocks, 16))
+    s = Scheduler(make_policy(policy), handler, blocks)
+    s._kv_bytes_per_token = 1.0
+    return s
+
+
+def req(pid="p0", turn=0, prompt=160, out=16, arr=0.0, parr=0.0, tool="ls"):
+    return Request(program_id=pid, turn_idx=turn, prompt_len=prompt,
+                   output_len=out, arrival_time=arr, program_arrival_time=parr,
+                   tool=tool, is_last_turn=tool is None)
+
+
+class TestPinLifecycle:
+    def test_finish_with_tool_pins(self):
+        s = make_sched(cold_start_k=0)
+        # feed tool history so the per-tool CDF pins
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req()
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        r.generated = r.output_len
+        info = s.on_request_finish(r, 1.0)
+        assert info["pinned"] and info["ttl"] > 0
+        assert "p0" in s.pinned and s.blocks.pinned["p0"] > 0
+
+    def test_last_turn_frees(self):
+        s = make_sched()
+        r = req(tool=None)
+        s.on_request_arrive(r, 0.0)
+        s.admit(r, 0.0)
+        info = s.on_request_finish(r, 1.0)
+        assert not info["pinned"] and s.blocks.used == 0
+
+    def test_ttl_expiry_evicts(self):
+        s = make_sched(cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req()
+        s.on_request_arrive(r, 0.0)
+        s.admit(r, 0.0)
+        info = s.on_request_finish(r, 1.0)
+        ttl = info["ttl"]
+        s.unpin_expired(1.0 + ttl + 0.01)
+        assert "p0" not in s.pinned and s.blocks.used == 0
+        assert s.stats.ttl_expiries == 1
+
+    def test_expiry_deferred_when_back_in_queue(self):
+        """§5.2: no premature eviction if the follow-up already arrived."""
+        s = make_sched(cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req()
+        s.on_request_arrive(r, 0.0)
+        s.admit(r, 0.0)
+        info = s.on_request_finish(r, 1.0)
+        nxt = req(turn=1, prompt=320, arr=100.0)
+        s.on_request_arrive(nxt, 100.0)
+        s.unpin_expired(1e9)                       # way past TTL
+        assert "p0" in s.pinned                    # protected by waiting turn
+
+    def test_ttl_hit_adopts_prefix(self):
+        s = make_sched(cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req(prompt=160, out=16)
+        s.on_request_arrive(r, 0.0)
+        s.admit(r, 0.0)
+        r.generated = 16
+        s.on_request_finish(r, 1.0)
+        nxt = req(turn=1, prompt=160 + 16 + 32, arr=2.0)
+        s.on_request_arrive(nxt, 2.0)
+        assert s.admit(nxt, 2.0)
+        assert nxt.served_from_pin and nxt.cached_prefix == 176
+        assert s.stats.ttl_hits == 1
+
+    def test_deadlock_prevention_unpins_latest(self):
+        """§5.2: when admission fails, unpin victims (latest arrival first)."""
+        s = make_sched(cold_start_k=0, total_blocks=30)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1000.0)  # huge TTLs
+        s.handler.ttl_model.observe_queueing_delay(1000.0)
+        for i, t in [(0, 0.0), (1, 1.0)]:
+            r = req(pid=f"p{i}", prompt=160, parr=t)
+            s.on_request_arrive(r, t)
+            assert s.admit(r, t)
+            s.on_request_finish(r, t + 0.5)
+        assert len(s.pinned) == 2
+        big = req(pid="p9", prompt=320, arr=2.0)
+        s.on_request_arrive(big, 2.0)
+        admitted = s.schedule(2.0)
+        assert big in admitted
+        assert s.stats.deadlock_evictions >= 1
+        # p1 (later arrival) should be the first victim
+        assert "p0" in s.pinned or len(s.pinned) == 0
+
+
+class TestPriorities:
+    def test_continuum_order(self):
+        """§4.3: preempted > pinned-within-TTL > program FCFS."""
+        s = make_sched()
+        a = req(pid="a", arr=5.0, parr=5.0)
+        b = req(pid="b", arr=6.0, parr=1.0)          # earlier program
+        c = req(pid="c", arr=7.0, parr=3.0)
+        c.state = RequestState.PREEMPTED
+        s.waiting = [a, b, c]
+        s.pinned["a"] = type("E", (), {"expiry": 99.0})
+        order = []
+        while s.waiting:
+            r = s.pick_next(0.0)
+            order.append(r.program_id)
+            s.waiting.remove(r)
+        assert order == ["c", "a", "b"]              # preempted, pinned, FCFS
+
+    def test_vllm_request_fcfs(self):
+        s = make_sched(policy="vllm")
+        a = req(pid="a", arr=5.0, parr=0.0)
+        b = req(pid="b", arr=3.0, parr=9.0)
+        s.waiting = [a, b]
+        assert s.pick_next(0.0) is b                 # request arrival order
+
+    def test_autellix_least_service_first(self):
+        s = make_sched(policy="autellix")
+        s.attained_service = {"a": 100.0, "b": 1.0}
+        a = req(pid="a", arr=0.0, parr=0.0)
+        b = req(pid="b", arr=1.0, parr=1.0)
+        s.waiting = [a, b]
+        assert s.pick_next(0.0) is b
+
+    def test_infercept_retention_rule(self):
+        """InferCept preserves iff E[duration] < reload cost; no TTL bound."""
+        s = make_sched(policy="infercept", reload_s=5.0)
+        for _ in range(10):
+            s.handler.ttl_model.observe_tool("fast", 1.0)
+            s.handler.ttl_model.observe_tool("slow", 100.0)
+        fast = s.policy.retention(req(tool="fast"), "fast", s.handler)
+        slow = s.policy.retention(req(tool="slow"), "slow", s.handler)
+        assert fast.ttl == math.inf
+        assert slow.ttl == 0.0
+
+    def test_queueing_delay_feeds_tbar(self):
+        s = make_sched()
+        r = req(turn=1, arr=0.0)
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 7.5)
+        assert s.handler.ttl_model.t_bar.mean == pytest.approx(7.5)

@@ -1,0 +1,73 @@
+"""Workload generator: statistics match the paper's Table 2; trace IO."""
+import numpy as np
+import pytest
+
+from repro.sim.workload import (BFCL, SWE_BENCH, generate_programs, load_trace,
+                                save_trace)
+
+
+class TestWorkloadStats:
+    def test_swe_bench_turns(self):
+        ps = generate_programs(SWE_BENCH, n=300, rate_jps=1.0, seed=0)
+        turns = np.array([p.num_turns for p in ps])
+        assert abs(turns.mean() - 10.9) < 1.0          # Table 2: (10.9, 2.1)
+        assert 1.0 < turns.std() < 3.5
+
+    def test_swe_bench_tokens(self):
+        ps = generate_programs(SWE_BENCH, n=300, rate_jps=1.0, seed=0)
+        toks = np.array([p.total_tokens() for p in ps])
+        assert abs(toks.mean() - 70126) / 70126 < 0.15  # Table 2
+
+    def test_tool_durations_long_tailed(self):
+        """Fig. 5: slowest 10% dominate total time for tail tools."""
+        ps = generate_programs(SWE_BENCH, n=500, rate_jps=1.0, seed=1)
+        durs = {}
+        for p in ps:
+            for t in p.turns:
+                if t.tool:
+                    durs.setdefault(t.tool, []).append(t.tool_duration)
+        cd = np.sort(np.array(durs["cd"]))
+        top10 = cd[int(0.9 * len(cd)):].sum() / max(cd.sum(), 1e-9)
+        assert top10 > 0.5                             # paper: 94.1% for cd
+
+    def test_poisson_arrivals(self):
+        ps = generate_programs(BFCL, n=1000, rate_jps=0.5, seed=2)
+        gaps = np.diff([p.arrival_time for p in ps])
+        assert abs(gaps.mean() - 2.0) < 0.3            # 1/rate
+
+    def test_turn_scale_replays_fig14(self):
+        base = generate_programs(SWE_BENCH, n=50, rate_jps=1.0, seed=3)
+        scaled = generate_programs(SWE_BENCH, n=50, rate_jps=1.0, seed=3,
+                                   turn_scale=3.0)
+        t0 = np.mean([p.num_turns for p in base])
+        t1 = np.mean([p.num_turns for p in scaled])
+        assert 2.5 < t1 / t0 < 3.5
+        # token totals stay in the same ballpark (inverse scaling)
+        tok0 = np.mean([p.total_tokens() for p in base])
+        tok1 = np.mean([p.total_tokens() for p in scaled])
+        assert 0.6 < tok1 / tok0 < 1.4
+
+    def test_context_accumulates(self):
+        p = generate_programs(SWE_BENCH, n=1, rate_jps=1.0, seed=4)[0]
+        ctxs = [p.context_len_at(i) for i in range(p.num_turns)]
+        assert all(b > a for a, b in zip(ctxs, ctxs[1:]))
+
+    def test_output_text_parses(self):
+        from repro.core.tool_handler import ToolCallParser
+        parser = ToolCallParser()
+        p = generate_programs(SWE_BENCH, n=1, rate_jps=1.0, seed=5)[0]
+        for t in p.turns[:-1]:
+            assert parser.parse(t.output_text) == t.tool
+        assert parser.parse(p.turns[-1].output_text) is None
+
+
+class TestTraceIO:
+    def test_roundtrip(self, tmp_path):
+        ps = generate_programs(BFCL, n=5, rate_jps=1.0, seed=6)
+        path = tmp_path / "trace.json"
+        save_trace(ps, path)
+        ps2 = load_trace(path)
+        assert len(ps2) == 5
+        assert ps2[0].program_id == ps[0].program_id
+        assert ps2[3].turns[0].new_tokens == ps[3].turns[0].new_tokens
+        assert ps2[2].turns[0].tool == ps[2].turns[0].tool

@@ -1,0 +1,78 @@
+"""Tool-call handler: parsers (Appendix A/B) + duration recording (§5.1)."""
+import json
+
+import pytest
+
+from repro.core.tool_handler import ToolCallHandler, ToolCallParser
+from repro.core.types import Request
+
+
+def make_req(**kw):
+    d = dict(program_id="p0", turn_idx=0, prompt_len=100, output_len=10,
+             arrival_time=0.0, program_arrival_time=0.0)
+    d.update(kw)
+    return Request(**d)
+
+
+class TestParser:
+    def setup_method(self):
+        self.p = ToolCallParser()
+
+    def test_bash_block(self):
+        text = "I'll list files.\n```bash\nls -la /src\n```"
+        assert self.p.parse(text) == "ls"
+
+    def test_bash_block_with_chaining(self):
+        text = "```bash\npytest -q && git add -A\n```"
+        assert self.p.parse(text) == "pytest"
+
+    def test_openai_schema(self):
+        text = json.dumps({"id": "fc_0", "call_id": "call_0",
+                           "type": "function_call", "name": "get_weather",
+                           "arguments": {"location": "Paris"}})
+        assert self.p.parse(text) == "get_weather"
+
+    def test_terminal_bench(self):
+        text = json.dumps({"state_analysis": "x", "explanation": "y",
+                           "commands": [{"keystrokes": "vim src/app.py\n",
+                                         "is_blocking": False}],
+                           "is_task_complete": False})
+        assert self.p.parse(text) == "vim"
+
+    def test_no_tool(self):
+        assert self.p.parse("The answer is 42.") is None
+        assert self.p.parse("") is None
+
+    def test_two_bash_blocks_rejected(self):
+        text = "```bash\nls\n```\ntext\n```bash\ncat x\n```"
+        assert self.p.parse(text) is None            # mini-swe-agent: exactly 1
+
+
+class TestHandler:
+    def test_interval_recording(self):
+        h = ToolCallHandler()
+        h.func_call_finish("grep", timestamp=10.0, program_id="p0")
+        h.update_tool_call_time("p0", timestamp=12.5)
+        d = h.ttl_model.records.durations("grep")
+        assert d.tolist() == [2.5]
+
+    def test_identify_prefers_structured_field(self):
+        h = ToolCallHandler()
+        r = make_req(tool="web_search", output_text="```bash\nls\n```")
+        assert h.identify_tool(r) == "web_search"
+
+    def test_identify_parses_text(self):
+        h = ToolCallHandler()
+        r = make_req(tool=None, output_text="```bash\nsed -i s/a/b/ f\n```")
+        assert h.identify_tool(r) == "sed"
+
+    def test_last_turn_no_tool(self):
+        h = ToolCallHandler()
+        r = make_req(is_last_turn=True, tool="ls")
+        assert h.identify_tool(r) is None
+
+    def test_program_finish_feeds_eta(self):
+        h = ToolCallHandler()
+        for i in range(10):
+            h.on_program_finish(f"p{i}", 7)
+        assert h.ttl_model.eta_est.n_programs == 10

@@ -1,0 +1,164 @@
+"""TTL utility model (paper §4.1–4.2): solver, cold start, memoryfulness."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ttl import (MemoryfulnessEstimator, TTLConfig, TTLModel,
+                            ToolDurationRecords)
+
+
+def make_model(**kw):
+    return TTLModel(TTLConfig(**kw))
+
+
+class TestSolver:
+    def test_cold_start_formula(self):
+        """T_default = u ln(G/u) for Exp(u) durations, eta=1 (paper §4.2)."""
+        m = make_model(exp_unit_mean=1.0)
+        assert m._cold_start_ttl(math.e) == pytest.approx(1.0)
+        assert m._cold_start_ttl(0.5) == 0.0         # G <= u: no pin
+        m2 = make_model(exp_unit_mean=2.0)
+        assert m2._cold_start_ttl(2 * math.e) == pytest.approx(2.0)
+
+    def test_argmax_picks_cdf_knee(self):
+        """With durations {1, 100} and G=4: tau=1 gives 0.5*4-1=1 > tau=100
+        gives 1*4-100<0 -> tau*=1 (robustness to the long tail)."""
+        d = np.array([1.0, 100.0])
+        tau, gain = TTLModel._argmax_over_durations(d, G=4.0)
+        assert tau == 1.0 and gain == pytest.approx(1.0)
+
+    def test_argmax_covers_all_when_g_large(self):
+        d = np.array([1.0, 2.0, 3.0])
+        tau, gain = TTLModel._argmax_over_durations(d, G=1000.0)
+        assert tau == 3.0                            # full coverage worth it
+
+    def test_no_pin_when_gain_negative(self):
+        d = np.array([10.0, 20.0])
+        tau, gain = TTLModel._argmax_over_durations(d, G=1.0)
+        assert tau == 0.0
+
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(st.floats(0.01, 500.0), min_size=1, max_size=64),
+           st.floats(0.0, 1000.0))
+    def test_argmax_is_optimal_over_candidates(self, durations, G):
+        """Property: the returned tau beats every candidate tau (Eq. 2)."""
+        d = np.array(durations)
+        tau, gain = TTLModel._argmax_over_durations(d, G)
+        n = d.size
+        for cand in list(d) + [0.0]:
+            p = np.mean(d <= cand)
+            assert p * G - cand <= max(gain, 0.0) + 1e-9
+
+    def test_solver_pipeline_sources(self):
+        m = make_model(cold_start_k=3)
+        dec = m.solve("ls", prefill_reload=5.0)
+        assert dec.source == "cold_start"
+        for _ in range(5):
+            m.observe_tool("other", 1.0)
+        dec = m.solve("ls", prefill_reload=5.0)
+        assert dec.source == "global"               # |S[ls]| <= K, |S| > K
+        for _ in range(5):
+            m.observe_tool("ls", 0.5)
+        dec = m.solve("ls", prefill_reload=5.0)
+        assert dec.source == "per_tool"
+        assert 0 < dec.ttl <= m.cfg.max_ttl
+
+    def test_max_ttl_bound(self):
+        m = make_model(cold_start_k=0, max_ttl=2.0)
+        for _ in range(10):
+            m.observe_tool("slow", 100.0)
+        m.observe_queueing_delay(1000.0)
+        dec = m.solve("slow", prefill_reload=1000.0)
+        assert dec.ttl <= 2.0
+
+
+class TestMemoryfulness:
+    def test_fixed_length_programs_eta_one(self):
+        """All programs same N -> fully memoryful, eta = 1 (paper §4.1)."""
+        e = MemoryfulnessEstimator(min_programs=2)
+        for _ in range(10):
+            e.observe_program(8)
+        assert e.eta == pytest.approx(1.0)
+
+    def test_mixed_lengths_eta_positive(self):
+        e = MemoryfulnessEstimator(min_programs=2)
+        rng = np.random.default_rng(0)
+        for _ in range(200):
+            e.observe_program(int(rng.normal(10, 2)))
+        assert 0.5 < e.eta <= 1.0                    # near-fixed lengths
+
+    def test_geometric_eta_near_zero(self):
+        """Geometric turn counts are memoryless -> eta ~ 0 (paper example)."""
+        e = MemoryfulnessEstimator(min_programs=2)
+        rng = np.random.default_rng(0)
+        for _ in range(3000):
+            e.observe_program(int(rng.geometric(0.25)))
+        assert abs(e.eta) < 0.35
+
+    def test_default_before_enough_samples(self):
+        e = MemoryfulnessEstimator(default=1.0, min_programs=8)
+        e.observe_program(5)
+        assert e.eta == 1.0
+
+
+class TestRecords:
+    def test_cdf(self):
+        r = ToolDurationRecords()
+        for d in [1.0, 2.0, 3.0, 4.0]:
+            r.record("t", d)
+        assert r.cdf("t", 2.0) == pytest.approx(0.5)
+        assert r.cdf("t", 0.5) == 0.0
+        assert r.cdf("t", 10.0) == 1.0
+        assert r.cdf(None, 2.0) == pytest.approx(0.5)  # global mirror
+
+    def test_cap_bounds_memory(self):
+        r = ToolDurationRecords(cap=16)
+        for i in range(100):
+            r.record("t", float(i))
+        assert r.count("t") == 16
+
+
+class TestParallelTools:
+    """Paper Appendix C.1: parallel fan-out = barrier on all tools."""
+
+    def test_product_cdf(self):
+        m = make_model(cold_start_k=0)
+        for _ in range(150):
+            m.observe_tool("a", 1.0)
+            m.observe_tool("b", 2.0)
+        m.observe_queueing_delay(10.0)
+        # single tools would pin at their own durations
+        da = m.solve("a", prefill_reload=5.0)
+        # parallel barrier: P(tau) = P_a(tau)*P_b(tau): 0 until tau>=2
+        dp = m.solve_parallel(["a", "b"], prefill_reload=5.0)
+        assert dp.ttl >= 2.0 > da.ttl == 1.0
+        assert dp.source == "parallel"
+
+    def test_parallel_no_pin_when_barrier_too_slow(self):
+        m = make_model(cold_start_k=0)
+        for _ in range(150):
+            m.observe_tool("fast", 0.1)
+            m.observe_tool("slow", 500.0)
+        dp = m.solve_parallel(["fast", "slow"], prefill_reload=1.0)
+        assert dp.ttl == 0.0                 # barrier dominated by the tail
+
+    def test_single_tool_falls_through(self):
+        m = make_model(cold_start_k=0)
+        for _ in range(150):
+            m.observe_tool("x", 1.0)
+        assert m.solve_parallel(["x"], 5.0).ttl == m.solve("x", 5.0).ttl
+
+
+def test_handler_parallel_joint_key():
+    from repro.core.tool_handler import ToolCallHandler
+    from repro.core.types import Request
+    h = ToolCallHandler()
+    r = Request(program_id="p", turn_idx=0, prompt_len=10, output_len=5,
+                arrival_time=0.0, program_arrival_time=0.0,
+                parallel_tools=[("b", 1.0), ("a", 2.0)])
+    assert h.identify_tool(r) == "par:a+b"
+    h.func_call_finish("par:a+b", 1.0, "p")
+    h.update_tool_call_time("p", 3.0)        # barrier interval = 2.0
+    assert h.ttl_model.records.durations("par:a+b").tolist() == [2.0]
