@@ -1,0 +1,70 @@
+"""Cross-program shared-prefix KV: prefill tokens saved, JCT and TTFT vs
+share ratio, for three stacks:
+
+  baseline          — vLLM semantics (no retention, no prefix cache)
+  continuum         — TTL pinning only (the paper's system)
+  continuum+prefix  — TTL pinning + the radix shared-prefix subsystem
+
+Sweeps the fraction of each program's tokens that is a fleet-shared agent
+preamble (system prompt + tool schemas). The headline emits the prefill
+reduction and JCT gain of continuum+prefix over continuum at share 0.3
+(acceptance: >=30% fewer prefill tokens, lower mean JCT).
+"""
+from benchmarks.common import emit, run_one, save_rows
+
+CONFIGS = (
+    ("baseline", dict(policy="vllm", prefix=False)),
+    ("continuum", dict(policy="continuum", prefix=False)),
+    ("continuum+prefix", dict(policy="continuum", prefix=True)),
+)
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 24 if quick else 60
+    rate = 0.06
+    kv = 20e9
+    ratios = (0.15, 0.3) if quick else (0.0, 0.15, 0.3, 0.5)
+    rows = []
+    for ratio in ratios:
+        for name, kw in CONFIGS:
+            r = run_one(kw["policy"], workload="swe-bench", n=n, rate=rate,
+                        kv_budget=kv, prefix=kw["prefix"], share_ratio=ratio)
+            r["config"] = name
+            r["share_ratio"] = ratio
+            rows.append(r)
+    # fleet scenario: 4 engines x 4 agent templates — prefix-affinity
+    # routing co-locates each template's sessions where its preamble lives
+    for router in ("session", "prefix_affinity"):
+        r = run_one("continuum", workload="swe-bench", n=max(32, n),
+                    rate=0.15, kv_budget=kv, prefix=True, share_ratio=0.3,
+                    prefix_groups=4, n_engines=4, router_policy=router)
+        r["config"] = f"fleet-continuum+prefix/{router}"
+        r["share_ratio"] = 0.3
+        rows.append(r)
+    save_rows("prefix_sharing", rows)
+
+    ratio = 0.3
+    sub = {r["config"]: r for r in rows
+           if r.get("share_ratio") == ratio and "fleet" not in r["config"]}
+    cont, pref = sub["continuum"], sub["continuum+prefix"]
+    reduction = 1 - pref["prefill_tokens"] / max(cont["prefill_tokens"], 1)
+    emit("prefix.share0.3.prefill_reduction_pct", 100 * reduction,
+         f"{cont['prefill_tokens']:.0f} -> {pref['prefill_tokens']:.0f} tokens")
+    emit("prefix.share0.3.jct_speedup_vs_continuum",
+         cont["avg_jct"] / max(pref["avg_jct"], 1e-9),
+         f"continuum={cont['avg_jct']:.0f}s +prefix={pref['avg_jct']:.0f}s")
+    emit("prefix.share0.3.ttft_speedup_vs_continuum",
+         cont["ttft"] / max(pref["ttft"], 1e-9),
+         f"continuum={cont['ttft']:.2f}s +prefix={pref['ttft']:.2f}s")
+    affin = {r["config"]: r for r in rows if "fleet" in r["config"]}
+    sess = affin["fleet-continuum+prefix/session"]
+    paff = affin["fleet-continuum+prefix/prefix_affinity"]
+    emit("prefix.router_affinity.prefill_saving_vs_session",
+         sess["prefill_tokens"] / max(paff["prefill_tokens"], 1e-9),
+         f"session={sess['prefill_tokens']:.0f} "
+         f"affinity={paff['prefill_tokens']:.0f} tokens")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

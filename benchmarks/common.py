@@ -10,6 +10,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 from repro.configs import get_config                      # noqa: E402
 from repro.serving.engine import Engine, EngineConfig     # noqa: E402
 from repro.serving.offload import OffloadConfig           # noqa: E402
+from repro.serving.prefix import PrefixConfig             # noqa: E402
 from repro.serving.profiler import HardwareProfile        # noqa: E402
 from repro.sim.runner import run_workload                 # noqa: E402
 from repro.sim.workload import WORKLOADS, generate_programs  # noqa: E402
@@ -28,11 +29,14 @@ ABLATIONS = ("vllm", "fcfs_program", "static_ttl", "continuum")
 def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
             offload=None, ssd=0.0, arch=None, chips=None, kv_budget=None,
             max_batch=None, chunk_size=None, turn_scale=1.0,
-            scheduler_overhead_s=0.0, n_engines=1, router_policy="session"):
+            scheduler_overhead_s=0.0, n_engines=1, router_policy="session",
+            prefix=False, share_ratio=0.0, prefix_groups=1):
     arch_cfg = get_config(arch or DEFAULT["arch"])
     spec = WORKLOADS[workload]
     programs = generate_programs(spec, n=n, rate_jps=rate, seed=seed,
-                                 turn_scale=turn_scale)
+                                 turn_scale=turn_scale,
+                                 share_ratio=share_ratio,
+                                 prefix_groups=prefix_groups)
     off = None
     if offload:
         off = OffloadConfig(dram_bytes=offload, ssd_bytes=ssd)
@@ -43,7 +47,8 @@ def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
             max_batch=max_batch or DEFAULT["max_batch"],
             chunk_size=chunk_size or DEFAULT["chunk_size"],
             kv_budget_bytes=kv_budget or DEFAULT["kv_budget"],
-            scheduler_overhead_s=scheduler_overhead_s)
+            scheduler_overhead_s=scheduler_overhead_s,
+            prefix=PrefixConfig() if prefix else None)
         engines.append(Engine(arch_cfg, ecfg, HardwareProfile(),
                               engine_id=f"e{i}"))
     from repro.serving.router import Router
@@ -58,11 +63,16 @@ def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
             "throughput_jpm": summary.throughput_jobs_per_s * 60,
             "tok_per_s": summary.throughput_tokens_per_s,
             "queueing": summary.avg_queueing,
+            "ttft": summary.avg_ttft,
             "ttl_hit_rate": summary.avg_ttl_hit_rate,
+            "prefill_tokens": summary.prefill_tokens,
+            "prefix_hit_tokens": summary.prefix_hit_tokens,
             "pins": stats.pins, "hits": stats.ttl_hits,
             "expiries": stats.ttl_expiries,
             "evictions": stats.deadlock_evictions,
             "preemptions": stats.preemptions,
+            "prefix_hits": sum(e.scheduler.stats.prefix_hits
+                               for e in engines),
             "wall_s": wall}
 
 

@@ -8,7 +8,11 @@ historical tool-call records S (inside the tool handler). The engine calls:
     schedule(now, admit_fn)   — line 13–26 (admission via engine callback)
 
 Memory lives in a :class:`~repro.serving.blocks.BlockManager`; offload
-tiers in an optional :class:`~repro.serving.offload.OffloadManager`.
+tiers in an optional :class:`~repro.serving.offload.OffloadManager`; the
+optional cross-program shared-prefix cache in a
+:class:`~repro.serving.prefix.RadixPrefixIndex` (admission then charges
+only the suffix a radix match doesn't cover, and TTL pins inherit the
+matched path's refcount so pinned prefixes are eviction-proof).
 """
 from __future__ import annotations
 
@@ -21,6 +25,7 @@ from repro.core.tool_handler import ToolCallHandler
 from repro.core.types import Request, RequestState
 from repro.serving.blocks import BlockManager
 from repro.serving.offload import OffloadManager
+from repro.serving.prefix import RadixPrefixIndex, request_block_hashes
 
 
 @dataclasses.dataclass
@@ -30,6 +35,8 @@ class PinEntry:
     expiry: float                  # absolute time; math.inf = until return
     tokens: int                    # cached context tokens
     pinned_at: float
+    prefix_node: Optional[object] = None   # radix lock inherited from the
+    # finished request: keeps the program's shared-prefix path pin-protected
 
 
 @dataclasses.dataclass
@@ -41,16 +48,20 @@ class SchedulerStats:
     preemptions: int = 0
     offload_reloads: int = 0
     full_recomputes: int = 0
+    prefix_hits: int = 0           # admissions served from the radix index
+    prefix_hit_tokens: int = 0     # prompt tokens covered by those matches
 
 
 class Scheduler:
     def __init__(self, policy: Policy, handler: ToolCallHandler,
                  blocks: BlockManager,
-                 offload: Optional[OffloadManager] = None):
+                 offload: Optional[OffloadManager] = None,
+                 prefix_index: Optional[RadixPrefixIndex] = None):
         self.policy = policy
         self.handler = handler
         self.blocks = blocks
         self.offload = offload
+        self.prefix_index = prefix_index
         self.waiting: list[Request] = []
         self.pinned: dict[str, PinEntry] = {}          # TTL map P
         self.attained_service: dict[str, float] = {}   # Autellix PLAS state
@@ -73,8 +84,10 @@ class Scheduler:
         req.finish_time = now
         tool = self.handler.identify_tool(req)
         if tool is None:
-            # last request of its program: free KV + any leftover pin
-            self._free_finished(req)
+            # last request of its program: free KV + any leftover pin. The
+            # program will never return, so nothing is offloaded (and any
+            # stale offload entry is dropped to reclaim tier capacity).
+            self._free_finished(req, final=True)
             self._unpin(req.program_id, reason="program_done")
             self.handler.on_program_finish(req.program_id,
                                            self.program_turns.get(req.program_id,
@@ -87,20 +100,32 @@ class Scheduler:
             n = self.blocks.pin(req.request_id, req.program_id)
             self.pinned[req.program_id] = PinEntry(
                 req.program_id, req.request_id, now + decision.ttl,
-                req.prompt_len + req.generated, now)
+                req.prompt_len + req.generated, now,
+                prefix_node=req.prefix_node)   # pin inherits the radix lock
+            req.prefix_node = None
             self.stats.pins += 1
             return {"pinned": True, "ttl": decision.ttl, "blocks": n}
         self._free_finished(req)
         return {"pinned": False, "ttl": 0.0}
 
-    def _free_finished(self, req: Request) -> None:
+    def _free_finished(self, req: Request, final: bool = False) -> None:
         self.blocks.free_request(req.request_id)
+        self._release_prefix(req)
         if self.offload is not None:
-            tokens = req.prompt_len + req.generated
-            self.offload.offload(req.program_id, tokens,
-                                 tokens * self._kv_bytes_per_token)
+            if final:
+                # program finished: no future turn will ever reload this KV
+                self.offload.drop(req.program_id)
+            else:
+                tokens = req.prompt_len + req.generated
+                self.offload.offload(req.program_id, tokens,
+                                     tokens * self._kv_bytes_per_token)
         if self.on_evict is not None:
             self.on_evict(req.program_id)
+
+    def _release_prefix(self, req: Request) -> None:
+        if self.prefix_index is not None and req.prefix_node is not None:
+            self.prefix_index.release(req.prefix_node)
+        req.prefix_node = None
 
     # engine wires this (depends on model config)
     _kv_bytes_per_token: float = 0.0
@@ -119,7 +144,11 @@ class Scheduler:
         if e is None:
             return 0
         n = self.blocks.unpin_free(program_id)
-        if self.offload is not None and n:
+        if self.prefix_index is not None and e.prefix_node is not None:
+            # the shared path stays cached but is no longer pin-protected
+            self.prefix_index.release(e.prefix_node)
+            e.prefix_node = None
+        if self.offload is not None and n and reason != "program_done":
             self.offload.offload(program_id, e.tokens,
                                  e.tokens * self._kv_bytes_per_token)
         if self.on_evict is not None:
@@ -135,38 +164,109 @@ class Scheduler:
                                                  self.attained_service)
         return min(self.waiting, key=key)
 
+    # ------------------------------------------------- cached-prefix sources
+    def _pin_tokens(self, req: Request) -> int:
+        e = self.pinned.get(req.program_id)
+        return min(e.tokens, req.prompt_len) if e is not None else 0
+
+    def _radix_tokens(self, req: Request) -> int:
+        """Shared-prefix coverage from the radix index (read-only probe).
+        Capped at prompt_len - 1: the final prompt token is always computed
+        so the first output token has fresh logits (vLLM semantics)."""
+        if self.prefix_index is None:
+            return 0
+        hashes = request_block_hashes(req, self.blocks.cfg.block_size)
+        blocks = self.prefix_index.match_blocks(hashes)
+        return min(blocks * self.blocks.cfg.block_size,
+                   max(req.prompt_len - 1, 0))
+
+    def _offload_tokens(self, req: Request) -> int:
+        entry = self.offload.lookup(req.program_id) if self.offload else None
+        return min(entry.tokens, req.prompt_len) if entry is not None else 0
+
+    def _admit_need(self, req: Request) -> int:
+        """Blocks `admit` would reserve for `req` (for deadlock sizing).
+        Mirrors admit()'s source selection exactly: an offload win charges
+        the full prompt (the reloaded KV needs its blocks)."""
+        pin_t = self._pin_tokens(req)
+        radix_t = self._radix_tokens(req)
+        off_t = self._offload_tokens(req)
+        if pin_t >= max(radix_t, off_t) and pin_t > 0:
+            need = self.blocks.blocks_for_tokens(req.prompt_len - pin_t)
+            return max(0, need - self.blocks.cfg.state_blocks)
+        if radix_t >= off_t and radix_t > 0:
+            return self.blocks.blocks_for_tokens(req.prompt_len - radix_t)
+        return self.blocks.blocks_for_tokens(req.prompt_len)
+
     def admit(self, req: Request, now: float) -> bool:
-        """Try to place `req`'s KV footprint; True if admitted. Accounts for
-        a TTL hit (adopting the program's pinned prefix)."""
-        cached = 0
-        if req.program_id in self.pinned:
-            e = self.pinned[req.program_id]
-            cached = min(e.tokens, req.prompt_len)
+        """Try to place `req`'s KV footprint; True if admitted. Cached
+        context can come from three sources, best coverage wins:
+
+        - the program's own TTL pin (adopted; state blocks resident),
+        - a cross-program radix match (shared blocks ref-acquired; only the
+          uncovered suffix is charged),
+        - an offload-tier entry (full blocks reserved, KV reloaded over the
+          link — skips compute, pays ``reload_seconds``).
+        """
+        pin_t = self._pin_tokens(req)
+        radix_t = self._radix_tokens(req)
+        off_t = self._offload_tokens(req)
+        if pin_t >= max(radix_t, off_t) and pin_t > 0:
+            source, cached = "pin", pin_t
+        elif radix_t >= off_t and radix_t > 0:
+            source, cached = "radix", radix_t
+        elif off_t > 0:
+            source, cached = "offload", off_t
+        else:
+            source, cached = "none", 0
+        node = None
+        if source == "radix":
+            # lock the matched path *before* sizing: the in-admit eviction
+            # below must not shrink the coverage `need` is computed from
+            hashes = request_block_hashes(req, self.blocks.cfg.block_size)
+            blocks, node = self.prefix_index.acquire(hashes, now)
+            cached = min(blocks * self.blocks.cfg.block_size,
+                         max(req.prompt_len - 1, 0))
         # vLLM semantics: reserve prompt blocks at admission; decode growth
-        # goes through extend() with preemption on pressure.
-        need = self.blocks.blocks_for_tokens(req.prompt_len - cached)
-        if cached:
+        # goes through extend() with preemption on pressure. An offloaded
+        # prefix still needs its blocks — the KV is reloaded into them.
+        charge = 0 if source == "offload" else cached
+        need = self.blocks.blocks_for_tokens(req.prompt_len - charge)
+        if source == "pin":
             need = max(0, need - self.blocks.cfg.state_blocks)  # state resident
         if not self.blocks.can_allocate(need):
-            return False
+            # reclaim unreferenced shared-prefix cache before giving up
+            deficit = need - (self.blocks.free - self.blocks.watermark_blocks)
+            if self.prefix_index is None \
+                    or self.prefix_index.evict(deficit) <= 0 \
+                    or not self.blocks.can_allocate(need):
+                if node is not None:
+                    self.prefix_index.release(node)
+                return False
         # commit
-        if cached:
+        if source == "pin":
             self.blocks.adopt_pin(req.program_id, req.request_id)
-            del self.pinned[req.program_id]
+            entry = self.pinned.pop(req.program_id)
+            req.prefix_node = entry.prefix_node    # adopt the radix lock too
             self.stats.ttl_hits += 1
             req.served_from_pin = True
             req.cached_prefix = cached
             req.reload_seconds = 0.0
-        else:
-            entry = self.offload.lookup(req.program_id) if self.offload else None
-            if entry is not None:
-                # reloaded prefix skips prefill compute but pays link time
-                req.reload_seconds = self.offload.reload_seconds(req.program_id)
-                req.cached_prefix = min(entry.tokens, req.prompt_len)
-                self.offload.drop(req.program_id)
-                self.stats.offload_reloads += 1
-            elif req.turn_idx > 0:
-                self.stats.full_recomputes += 1
+        elif source == "radix":
+            req.prefix_node = node
+            req.served_from_shared = True
+            req.cached_prefix = cached
+            req.reload_seconds = 0.0
+            self.stats.prefix_hits += 1
+            self.stats.prefix_hit_tokens += req.cached_prefix
+        elif source == "offload":
+            # reloaded prefix skips prefill compute but pays link time
+            req.reload_seconds = self.offload.reload_seconds(req.program_id)
+            req.cached_prefix = cached
+            self.offload.drop(req.program_id)
+            self.stats.offload_reloads += 1
+        elif req.turn_idx > 0:
+            self.stats.full_recomputes += 1
         if need:
             self.blocks.allocate(req.request_id, need)
         self.waiting.remove(req)
@@ -178,6 +278,35 @@ class Scheduler:
             if not req.served_from_pin and req.turn_idx > 0:
                 self.handler.ttl_model.observe_queueing_delay(req.queueing_delay)
         return True
+
+    # --------------------------------------------------- shared-prefix hooks
+    def insert_prefix(self, req: Request, now: float) -> None:
+        """Called by the engine when `req`'s prefill completes: publish the
+        prompt into the radix index. Newly inserted blocks move from the
+        request's allocation into the shared pool; blocks another request
+        published first are freed as duplicates."""
+        idx = self.prefix_index
+        if idx is None:
+            return
+        hashes = request_block_hashes(req, self.blocks.cfg.block_size)
+        if not hashes:
+            return
+        held_blocks = 0
+        if req.prefix_node is not None:
+            held_blocks = req.prefix_node.depth_blocks()
+        new, dup, node = idx.insert(hashes, req.prefix_node, held_blocks, now)
+        req.prefix_node = node
+        if new:
+            self.blocks.to_shared(req.request_id, new)
+        if dup:
+            self.blocks.free_duplicates(req.request_id, dup)
+
+    def prefix_reclaim(self, need_blocks: int) -> int:
+        """Evict unreferenced shared-prefix blocks (engine decode-OOM path:
+        cheaper than preempting a running request)."""
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.evict(need_blocks)
 
     def free_victims(self, need_blocks: int, now: float) -> int:
         """Deadlock prevention (paper §5.2): unpin victims with the latest
@@ -205,10 +334,7 @@ class Scheduler:
                 break
             if not self.admit(req, now):
                 # deadlock prevention: free pinned victims, retry once
-                cached = 0
-                if req.program_id in self.pinned:
-                    cached = min(self.pinned[req.program_id].tokens, req.prompt_len)
-                need = self.blocks.blocks_for_tokens(req.prompt_len - cached)
+                need = self._admit_need(req)
                 if self.pinned:
                     self.free_victims(need, now)
                     if self.admit(req, now):

@@ -41,6 +41,11 @@ class Program:
     program_id: str
     arrival_time: float
     turns: list[Turn] = dataclasses.field(default_factory=list)
+    # cross-program shared preamble (system prompt / tool schemas): the
+    # first `shared_prefix_tokens` of the context come from the named
+    # shared stream, identical across every program with the same id
+    shared_prefix_tokens: int = 0
+    shared_prefix_id: Optional[str] = None
 
     @property
     def num_turns(self) -> int:
@@ -71,6 +76,8 @@ class Request:
     parallel_tools: Optional[list] = None   # [(name, duration), ...]
     output_text: str = ""
     is_last_turn: bool = False
+    shared_prefix_len: int = 0      # leading tokens from a shared stream
+    shared_prefix_id: Optional[str] = None
     request_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
 
     # --- engine-managed state ---
@@ -79,11 +86,15 @@ class Request:
     generated: int = 0              # output tokens generated so far
     cached_prefix: int = 0          # prompt tokens already in HBM at admission
     first_schedule_time: float = -1.0
+    first_token_time: float = -1.0  # TTFT anchor: first output token emitted
     finish_time: float = -1.0
     queueing_delay: float = 0.0     # time waited before first schedule
     preemptions: int = 0
     served_from_pin: bool = False   # admitted with its KV pinned (TTL hit)
+    served_from_shared: bool = False  # admitted via radix shared-prefix hit
     reload_seconds: float = 0.0     # time spent reloading/recomputing prefix
+    prefix_node: Optional[object] = None  # deepest locked radix node
+    block_hashes: Optional[tuple] = None  # cached prompt block hash chain
 
     @property
     def total_len(self) -> int:
@@ -106,8 +117,11 @@ class ProgramStats:
     total_queueing: float = 0.0     # sum of per-turn queueing delays ("bubble")
     total_reload: float = 0.0       # prefill-recompute / reload seconds
     total_tool_time: float = 0.0
+    total_ttft: float = 0.0         # sum of per-turn time-to-first-token
     ttl_hits: int = 0
     ttl_misses: int = 0
+    prefix_hits: int = 0            # turns admitted via shared-prefix match
+    prefix_hit_tokens: int = 0      # prompt tokens served from shared KV
 
     @property
     def jct(self) -> float:

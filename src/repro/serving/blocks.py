@@ -7,6 +7,15 @@ program, so the program's next turn can *adopt* them and skip prefill.
 SSM archs have near-constant per-request state; they use ``state_blocks``
 per request instead of per-token blocks — the same pin/adopt machinery
 applies (see DESIGN.md §4).
+
+Besides per-request allocations and per-program pins, the pool has a third
+owner: the *shared pool* — blocks whose content is deduplicated across
+requests/programs by the radix prefix index
+(:mod:`repro.serving.prefix`). A shared block may back many requests at
+once; the index refcounts them and calls :meth:`BlockManager.shared_free`
+only when eviction reclaims a refcount-zero path. The global invariant is
+
+    used == sum(alloc) + sum(pinned) + shared
 """
 from __future__ import annotations
 
@@ -30,7 +39,8 @@ class BlockManager:
         self.used = 0
         self.alloc: dict[int, int] = {}            # request_id -> blocks
         self.pinned: dict[str, int] = {}           # program_id -> blocks
-        self.peak_used = 0
+        self.shared = 0                            # blocks owned by the
+        self.peak_used = 0                         # shared-prefix pool
 
     # ----------------------------------------------------------- accounting
     def blocks_for_tokens(self, tokens: int) -> int:
@@ -93,6 +103,40 @@ class BlockManager:
         if n:
             self.alloc[request_id] = self.alloc.get(request_id, 0) + n
         return n
+
+    # -------------------------------------------------- shared-prefix pool
+    def to_shared(self, request_id: int, n: int) -> int:
+        """Transfer up to `n` blocks from a request's allocation into the
+        shared pool (prompt blocks entering the radix index). `used` is
+        unchanged — ownership moves, memory doesn't."""
+        moved = min(n, self.alloc.get(request_id, 0))
+        if moved:
+            self.alloc[request_id] -= moved
+            self.shared += moved
+        return moved
+
+    def free_duplicates(self, request_id: int, n: int) -> int:
+        """Free up to `n` of a request's blocks whose content turned out to
+        already be in the shared pool (another request inserted the same
+        prefix first)."""
+        freed = min(n, self.alloc.get(request_id, 0))
+        if freed:
+            self.alloc[request_id] -= freed
+            self.used -= freed
+        return freed
+
+    def shared_free(self, n: int) -> None:
+        """Radix eviction reclaimed `n` refcount-zero shared blocks."""
+        assert n <= self.shared, (n, self.shared)
+        self.shared -= n
+        self.used -= n
+
+    def check(self) -> None:
+        """Assert the ownership invariant (tests / debugging)."""
+        owned = sum(self.alloc.values()) + sum(self.pinned.values()) \
+            + self.shared
+        assert owned == self.used, (owned, self.used)
+        assert self.shared >= 0 and self.used >= 0
 
     def utilization(self) -> float:
         return self.used / max(self.total, 1)

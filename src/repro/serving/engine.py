@@ -6,6 +6,11 @@ plus one decode token for every running sequence. The scheduler (Algorithm
 1) decides admission order and KV retention; the execution backend supplies
 the step duration (virtual-clock cost model here, real JAX/TPU execution in
 ``backend.JaxBackend``).
+
+With ``EngineConfig.prefix`` set, the engine carries a per-replica
+shared-prefix radix index (:mod:`repro.serving.prefix`): finished prefills
+are published into it, admissions match against it, and decode-time memory
+pressure reclaims unreferenced cache before preempting anyone.
 """
 from __future__ import annotations
 
@@ -21,6 +26,8 @@ from repro.core.ttl import TTLConfig, TTLModel
 from repro.core.types import ProgramStats, Request, RequestState
 from repro.serving.blocks import BlockConfig, BlockManager
 from repro.serving.offload import OffloadConfig, OffloadManager
+from repro.serving.prefix import (PrefixConfig, RadixPrefixIndex,
+                                  request_block_hashes)
 from repro.serving.profiler import (CostModel, HardwareProfile,
                                     ModelServingProfile, build_profile,
                                     make_prefill_reload_fn)
@@ -61,6 +68,7 @@ class EngineConfig:
     kv_budget_bytes: float = 0.0         # 0 = derive from HBM minus params
     chips: int = 1
     offload: Optional[OffloadConfig] = None
+    prefix: Optional[PrefixConfig] = None  # cross-program shared-prefix KV
     ttl: TTLConfig = dataclasses.field(default_factory=TTLConfig)
     scheduler_overhead_s: float = 0.0    # per-step overhead (Table 4)
 
@@ -106,6 +114,14 @@ class Engine:
         # --- offload tiers ---
         self.offload = OffloadManager(ecfg.offload) if ecfg.offload else None
 
+        # --- cross-program shared-prefix index (radix over block hashes) ---
+        self.prefix_index: Optional[RadixPrefixIndex] = None
+        if ecfg.prefix is not None and ecfg.prefix.enabled \
+                and self.profile.kv_bytes_per_token > 0:   # SSM state: no
+            pcfg = dataclasses.replace(ecfg.prefix,        # prefix sharing
+                                       block_size=ecfg.block_size)
+            self.prefix_index = RadixPrefixIndex(pcfg, self.blocks)
+
         # --- TTL model + tool handler (profiler-backed PrefillReload) ---
         coef = self.cost.fit_prefill_quadratic(arch.max_seq_len)
         reload_fn = make_prefill_reload_fn(
@@ -114,7 +130,8 @@ class Engine:
         self.prefill_coef = coef
 
         policy = make_policy(ecfg.policy)
-        self.scheduler = Scheduler(policy, handler, self.blocks, self.offload)
+        self.scheduler = Scheduler(policy, handler, self.blocks, self.offload,
+                                   prefix_index=self.prefix_index)
         self.scheduler._kv_bytes_per_token = kvpt if kvpt > 0 else block_bytes
         if hasattr(self.backend, "drop_program"):
             self.scheduler.on_evict = self.backend.drop_program
@@ -186,11 +203,14 @@ class Engine:
         decode_reqs = [r for r in self.running
                        if r.done_prefill() and not r.done()]
 
-        # 3. decode block growth (+ preemption on OOM)
+        # 3. decode block growth (+ preemption on OOM; unreferenced shared
+        #    prefix cache is reclaimed first — cheaper than preempting)
         for r in list(decode_reqs):
             pos = r.prompt_len + r.generated
             if pos % self.ecfg.block_size == 0 and self.profile.kv_bytes_per_token > 0:
                 while not self.blocks.extend(r.request_id, 1):
+                    if self.scheduler.prefix_reclaim(1) > 0:
+                        continue
                     victim = self._pick_preemption_victim(exclude=r)
                     if victim is None:
                         break
@@ -207,21 +227,25 @@ class Engine:
 
         # 5. advance state
         total_tok = sum(w.chunk for w in prefill_work) + len(decode_reqs) or 1
+        end = now + dur
         for w in prefill_work:
             w.req.prefill_pos += w.chunk
             self.tokens_prefilled += w.chunk
             if w.req.done_prefill():
                 w.req.generated = max(w.req.generated, 1)  # prefill emits tok 1
                 self.tokens_decoded += 1
+                self._note_first_token(w.req, end)
+                # publish the finished prompt into the shared-prefix index
+                self.scheduler.insert_prefix(w.req, end)
             self.scheduler.note_service(
                 w.req.program_id, dur * w.chunk / total_tok)
         for r in decode_reqs:
             r.generated += 1
             self.tokens_decoded += 1
+            self._note_first_token(r, end)   # fully-cached prompts skip prefill
             self.scheduler.note_service(r.program_id, dur * 1 / total_tok)
 
         # 6. completions
-        end = now + dur
         for r in list(self.running):
             if r.done_prefill() and r.done():
                 self.running.remove(r)
@@ -229,6 +253,9 @@ class Engine:
                 ev.finished.append(r)
                 ps = self.programs[r.program_id]
                 ps.total_queueing += r.queueing_delay
+                if r.served_from_shared:
+                    ps.prefix_hits += 1
+                    ps.prefix_hit_tokens += r.cached_prefix
                 if r.served_from_pin:
                     ps.ttl_hits += 1
                 elif r.turn_idx > 0:
@@ -239,6 +266,22 @@ class Engine:
                     ev.tool_started.append((r, r.tool))
                     ps.total_tool_time += r.tool_duration
         return ev
+
+    def _note_first_token(self, r: Request, at: float) -> None:
+        if r.first_token_time < 0:
+            r.first_token_time = at
+            ps = self.programs.get(r.program_id)
+            if ps is not None:
+                ps.total_ttft += at - r.arrival_time
+
+    # ------------------------------------------------------- routing signals
+    def prefix_match_tokens(self, req: Request) -> int:
+        """Prompt tokens of `req` this engine could serve from its shared-
+        prefix index (the router's prefix-affinity score)."""
+        if self.prefix_index is None:
+            return 0
+        hashes = request_block_hashes(req, self.ecfg.block_size)
+        return self.prefix_index.match_blocks(hashes) * self.ecfg.block_size
 
     # ------------------------------------------------------------ preemption
     def _pick_preemption_victim(self, exclude: Request) -> Optional[Request]:
@@ -252,6 +295,8 @@ class Engine:
 
     def _preempt(self, r: Request, now: float) -> None:
         self.blocks.free_request(r.request_id)
+        self.scheduler._release_prefix(r)   # shared path stays cached; a
+        # re-admission will radix-match the already-published prompt
         if self.offload is not None:
             tokens = r.prefill_pos + r.generated
             self.offload.offload(r.program_id, tokens,
@@ -259,6 +304,8 @@ class Engine:
         r.state = RequestState.PREEMPTED
         r.prefill_pos = 0
         r.cached_prefix = 0
+        r.served_from_pin = False    # the adopted/shared cache is gone; a
+        r.served_from_shared = False  # re-admission earns its own hit flags
         r.preemptions += 1
         self.running.remove(r)
         self.scheduler.waiting.append(r)

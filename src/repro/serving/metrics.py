@@ -23,12 +23,17 @@ class Summary:
     avg_queueing: float          # per-program accumulated bubble time
     avg_ttl_hit_rate: float
     makespan: float
+    avg_ttft: float = 0.0        # mean per-turn time-to-first-token
+    prefill_tokens: float = 0.0  # tokens actually prefilled fleet-wide
+    prefix_hit_tokens: float = 0.0  # prompt tokens served from shared-prefix KV
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
 
 
-def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0) -> Summary:
+def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0,
+              prefill_tokens: float = 0.0,
+              prefix_hit_tokens: float = 0.0) -> Summary:
     done = [p for p in programs if p.finish_time >= 0]
     if not done:
         return Summary(0, *([0.0] * 9), 0.0)
@@ -38,6 +43,7 @@ def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0) -> Summar
     makespan = max(t1 - t0, 1e-9)
     hits = sum(p.ttl_hits for p in done)
     misses = sum(p.ttl_misses for p in done)
+    turns = sum(p.num_turns for p in done)
     return Summary(
         n_programs=len(done),
         avg_jct=float(jcts.mean()),
@@ -50,4 +56,7 @@ def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0) -> Summar
         avg_queueing=float(np.mean([p.total_queueing for p in done])),
         avg_ttl_hit_rate=hits / max(hits + misses, 1),
         makespan=float(makespan),
+        avg_ttft=float(sum(p.total_ttft for p in done) / max(turns, 1)),
+        prefill_tokens=float(prefill_tokens),
+        prefix_hit_tokens=float(prefix_hit_tokens),
     )

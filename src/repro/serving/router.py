@@ -4,6 +4,17 @@ its KV state; baselines: round-robin and least-loaded. Includes straggler
 mitigation: a session whose engine is overloaded beyond
 ``migrate_threshold``x the fleet median is migrated (losing its cache) —
 bounding the damage of a slow/hot replica.
+
+``prefix_affinity`` extends session routing for shared-prefix fleets
+(:mod:`repro.serving.prefix`): a *new* program is placed on the engine
+whose radix index already covers the most of its prompt (so 1000 sessions
+of one agent template land where the shared preamble's KV lives), with
+load as the tie-breaker; thereafter it is sticky like ``session``. A
+cache-hot engine is only preferred while its load stays within
+``affinity_balance`` x the least-loaded engine (plus a small absolute
+slack) — otherwise affinity degenerates into herding the whole fleet onto
+one replica, and re-prefilling a preamble elsewhere is far cheaper than
+queueing behind it (SGLang's cache-aware router applies the same guard).
 """
 from __future__ import annotations
 
@@ -17,11 +28,15 @@ from repro.core.types import Program, Request
 
 class Router:
     def __init__(self, engines, policy: Literal["session", "round_robin",
-                                                "least_loaded"] = "session",
-                 migrate_threshold: float = 0.0):
+                                                "least_loaded",
+                                                "prefix_affinity"] = "session",
+                 migrate_threshold: float = 0.0,
+                 affinity_balance: float = 1.5, affinity_slack: int = 4):
         self.engines = list(engines)
         self.policy = policy
         self.migrate_threshold = migrate_threshold
+        self.affinity_balance = affinity_balance
+        self.affinity_slack = affinity_slack
         self.session_map: dict[str, int] = {}
         self._rr = 0
         self._programs: dict[str, Program] = {}
@@ -67,7 +82,10 @@ class Router:
         # session-aware: sticky to the engine holding this program's state
         idx = self.session_map.get(req.program_id)
         if idx is None:
-            idx = int(np.argmin([e.load() for e in self.engines]))
+            if self.policy == "prefix_affinity":
+                idx = self._best_prefix_engine(req)
+            else:
+                idx = int(np.argmin([e.load() for e in self.engines]))
             self.session_map[req.program_id] = idx
         elif self.migrate_threshold > 0 and len(self.engines) > 1:
             loads = [e.load() for e in self.engines]
@@ -80,3 +98,22 @@ class Router:
                     self.migrations += 1
                     idx = new_idx
         return self.engines[idx]
+
+    def _best_prefix_engine(self, req: Request) -> int:
+        """Engine whose radix index covers the most of `req`'s prompt;
+        least-loaded breaks ties (and the no-match cold start). Engines
+        loaded beyond ``affinity_balance`` x the fleet minimum (+ slack)
+        forfeit their affinity bonus so cache heat never causes herding."""
+        loads = [e.load() for e in self.engines]
+        lo = min(loads)
+        cap = lo * self.affinity_balance + self.affinity_slack
+        best, best_key = 0, None
+        for i, e in enumerate(self.engines):
+            match = e.prefix_match_tokens(req) \
+                if hasattr(e, "prefix_match_tokens") else 0
+            if loads[i] > cap:
+                match = 0
+            key = (-match, loads[i])
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best

@@ -104,10 +104,16 @@ class Simulator:
     def summary(self) -> Summary:
         programs = []
         total_tokens = 0
+        prefill_tokens = 0
+        prefix_hit_tokens = 0
         for e in self.engines:
             programs.extend(e.programs.values())
             total_tokens += e.tokens_prefilled + e.tokens_decoded
-        return summarize(programs, total_tokens)
+            prefill_tokens += e.tokens_prefilled
+            prefix_hit_tokens += e.scheduler.stats.prefix_hit_tokens
+        return summarize(programs, total_tokens,
+                         prefill_tokens=prefill_tokens,
+                         prefix_hit_tokens=prefix_hit_tokens)
 
 
 def run_workload(programs: list[Program], engines: list[Engine],

@@ -13,6 +13,16 @@ Tool names are drawn from a per-dataset palette with per-tool duration
 scales, including heavy-tail tools (fetch_url, cd) matching Fig. 5.
 Programs arrive in a Poisson process. Traces serialize to JSON for replay
 (the paper open-sources its traces in the same spirit).
+
+Shared prefixes: real agent fleets run many concurrent sessions of the
+same agent template, so every program opens with an identical system
+prompt + tool-schema preamble (KVFlow/CacheWise). ``generate_programs``
+models this with ``share_ratio``: each program's first turn is prepended
+with ``share_ratio * tokens_mean`` preamble tokens drawn from a shared
+content stream (``prefix_groups`` splits the fleet across that many
+distinct templates). The serving layer's radix index
+(:mod:`repro.serving.prefix`) can then deduplicate the preamble's KV
+across programs.
 """
 from __future__ import annotations
 
@@ -80,10 +90,19 @@ def _lognormal_params(mean: float, sigma_ln: float) -> tuple[float, float]:
 
 
 def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
-                      seed: int = 0, turn_scale: float = 1.0) -> list[Program]:
+                      seed: int = 0, turn_scale: float = 1.0,
+                      share_ratio: float = 0.0,
+                      prefix_groups: int = 1) -> list[Program]:
     """Poisson arrivals at `rate_jps`; `turn_scale` replays the paper's
-    Fig. 14 experiment (more turns, inversely scaled token lengths)."""
+    Fig. 14 experiment (more turns, inversely scaled token lengths).
+
+    `share_ratio` > 0 prepends a shared agent preamble (system prompt +
+    tool schemas) of ``share_ratio * spec.tokens_mean`` tokens to every
+    program's first turn; programs are assigned round-robin to
+    `prefix_groups` distinct preamble contents (1 = one fleet-wide agent
+    template)."""
     rng = np.random.default_rng(seed)
+    shared_tokens = int(max(0.0, share_ratio) * spec.tokens_mean)
     t = 0.0
     out = []
     for i in range(n):
@@ -114,8 +133,14 @@ def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
             text = f"```bash\n{tool} arg{k}\n```" if tool else "Final answer."
             turns.append(Turn(new_tokens=new_tok, output_tokens=out_tok,
                               tool=tool, tool_duration=dur, output_text=text))
+        prefix_id = None
+        if shared_tokens:
+            # the preamble is extra context on top of the program's own work
+            turns[0].new_tokens += shared_tokens
+            prefix_id = f"{spec.name}/preamble-{i % max(prefix_groups, 1)}"
         out.append(Program(program_id=f"{spec.name}-{i}", arrival_time=t,
-                           turns=turns))
+                           turns=turns, shared_prefix_tokens=shared_tokens,
+                           shared_prefix_id=prefix_id))
     return out
 
 
@@ -125,10 +150,11 @@ def request_for_turn(p: Program, turn_idx: int, arrival: float) -> Request:
     if t.parallel_tools:
         dur = max(d for _, d in t.parallel_tools)       # barrier on all tools
     dur *= max(0.0, 1.0 - t.async_overlap)              # futures hide a share
+    prompt_len = p.context_len_at(turn_idx)
     return Request(
         program_id=p.program_id,
         turn_idx=turn_idx,
-        prompt_len=p.context_len_at(turn_idx),
+        prompt_len=prompt_len,
         output_len=t.output_tokens,
         arrival_time=arrival,
         program_arrival_time=p.arrival_time,
@@ -137,6 +163,8 @@ def request_for_turn(p: Program, turn_idx: int, arrival: float) -> Request:
         parallel_tools=t.parallel_tools,
         output_text=t.output_text,
         is_last_turn=turn_idx == p.num_turns - 1,
+        shared_prefix_len=min(p.shared_prefix_tokens, prompt_len),
+        shared_prefix_id=p.shared_prefix_id,
     )
 
 
@@ -146,6 +174,8 @@ def save_trace(programs: list[Program], path: str | pathlib.Path) -> None:
         "program_id": p.program_id,
         "arrival_time": p.arrival_time,
         "turns": [dataclasses.asdict(t) for t in p.turns],
+        "shared_prefix_tokens": p.shared_prefix_tokens,
+        "shared_prefix_id": p.shared_prefix_id,
     } for p in programs]
     pathlib.Path(path).write_text(json.dumps(data))
 
@@ -153,4 +183,7 @@ def save_trace(programs: list[Program], path: str | pathlib.Path) -> None:
 def load_trace(path: str | pathlib.Path) -> list[Program]:
     data = json.loads(pathlib.Path(path).read_text())
     return [Program(d["program_id"], d["arrival_time"],
-                    [Turn(**t) for t in d["turns"]]) for d in data]
+                    [Turn(**t) for t in d["turns"]],
+                    shared_prefix_tokens=d.get("shared_prefix_tokens", 0),
+                    shared_prefix_id=d.get("shared_prefix_id"))
+            for d in data]

@@ -1,6 +1,9 @@
 """Block allocator invariants, incl. hypothesis state-machine-ish sweep."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (optional dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serving.blocks import BlockConfig, BlockManager
 

@@ -3,7 +3,10 @@ under randomized agent workloads and policies."""
 import dataclasses
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (optional dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs import get_config
 from repro.core.types import Turn, Program

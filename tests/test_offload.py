@@ -1,0 +1,184 @@
+"""Offload tiers (DRAM->SSD demotion) and the parallel-tool TTL solver —
+direct coverage for paths previously exercised only indirectly."""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Scheduler
+from repro.core.policies import make_policy
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.ttl import TTLConfig, TTLModel
+from repro.core.types import Request
+from repro.serving.blocks import BlockConfig, BlockManager
+from repro.serving.offload import OffloadConfig, OffloadManager
+
+
+def make_store(dram=100.0, ssd=0.0):
+    return OffloadManager(OffloadConfig(dram_bytes=dram, ssd_bytes=ssd,
+                                        h2d_bw=10.0, ssd_bw=2.0))
+
+
+class TestDemoteLRU:
+    def test_demotes_oldest_dram_entry_to_ssd(self):
+        m = make_store(dram=100.0, ssd=1000.0)
+        m.offload("old", tokens=10, nbytes=60.0)
+        m.offload("new", tokens=10, nbytes=60.0)     # forces demotion of "old"
+        assert m.entries["old"].tier == "ssd"
+        assert m.entries["new"].tier == "dram"
+        assert m.dram_used == 60.0 and m.ssd_used == 60.0
+
+    def test_drops_when_no_ssd(self):
+        m = make_store(dram=100.0, ssd=0.0)
+        m.offload("a", tokens=10, nbytes=60.0)
+        m.offload("b", tokens=10, nbytes=60.0)
+        assert "a" not in m.entries                  # dropped, not demoted
+        assert m.entries["b"].tier == "dram"
+        assert m.dram_used == 60.0 and m.ssd_used == 0.0
+
+    def test_lru_touch_protects_recently_used(self):
+        m = make_store(dram=100.0, ssd=1000.0)
+        m.offload("a", tokens=10, nbytes=40.0)
+        m.offload("b", tokens=10, nbytes=40.0)
+        m.lookup("a")                                # a becomes MRU
+        m.offload("c", tokens=10, nbytes=40.0)       # evicts b, not a
+        assert m.entries["a"].tier == "dram"
+        assert m.entries["b"].tier == "ssd"
+
+    def test_demotion_cascades_until_fit(self):
+        m = make_store(dram=100.0, ssd=1000.0)
+        for pid in ("a", "b", "c"):
+            m.offload(pid, tokens=10, nbytes=30.0)
+        m.offload("big", tokens=10, nbytes=95.0)     # demotes all three
+        assert m.entries["big"].tier == "dram"
+        assert all(m.entries[p].tier == "ssd" for p in ("a", "b", "c"))
+        assert m.dram_used == 95.0 and m.ssd_used == 90.0
+
+    def test_ssd_full_drops_entry(self):
+        m = make_store(dram=50.0, ssd=40.0)
+        m.offload("a", tokens=10, nbytes=45.0)
+        m.offload("b", tokens=10, nbytes=45.0)       # a: 45 > ssd 40 -> drop
+        assert "a" not in m.entries
+        assert m.ssd_used == 0.0
+
+    def test_reload_seconds_uses_tier_bandwidth(self):
+        m = make_store(dram=100.0, ssd=1000.0)
+        m.offload("slowpath", tokens=10, nbytes=60.0)
+        m.offload("fastpath", tokens=10, nbytes=60.0)   # demotes slowpath
+        assert m.reload_seconds("fastpath") == pytest.approx(60.0 / 10.0)
+        assert m.reload_seconds("slowpath") == pytest.approx(60.0 / 2.0)
+        assert m.reload_seconds("missing") is None
+
+
+class TestFinalTurnOffload:
+    """Program-final requests must not consume offload capacity: the
+    program will never return, so its KV can never be reloaded."""
+
+    def _sched(self):
+        handler = ToolCallHandler(TTLModel(TTLConfig()),
+                                  prefill_reload_fn=lambda r: 5.0)
+        blocks = BlockManager(BlockConfig(1000, 16))
+        off = make_store(dram=1000.0)
+        s = Scheduler(make_policy("vllm"), handler, blocks, offload=off)
+        s._kv_bytes_per_token = 1.0
+        return s, off
+
+    def test_final_request_not_offloaded(self):
+        s, off = self._sched()
+        r = Request("p0", 0, 160, 16, 0.0, 0.0, tool=None, is_last_turn=True)
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        r.generated = r.output_len
+        s.on_request_finish(r, 1.0)
+        assert off.lookup("p0") is None
+        assert off.dram_used == 0.0
+
+    def test_final_request_drops_stale_entry(self):
+        s, off = self._sched()
+        off.offload("p0", tokens=100, nbytes=100.0)  # stale earlier-turn entry
+        r = Request("p0", 1, 160, 16, 0.0, 0.0, tool=None, is_last_turn=True)
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        r.generated = r.output_len
+        s.on_request_finish(r, 1.0)
+        assert off.lookup("p0") is None              # capacity reclaimed
+
+    def test_mid_program_request_still_offloaded(self):
+        s, off = self._sched()
+        r = Request("p0", 0, 160, 16, 0.0, 0.0, tool="ls",
+                    output_text="```bash\nls\n```")
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        r.generated = r.output_len
+        s.on_request_finish(r, 1.0)                  # vllm: no pin -> offload
+        assert off.lookup("p0") is not None
+
+
+class TestSolveParallel:
+    def _model(self, k=10):
+        return TTLModel(TTLConfig(cold_start_k=k, max_ttl=1e9))
+
+    def test_joint_cdf_is_product(self):
+        """Two independent tools, each P[d<=1]=0.5 at tau=1 => joint 0.25:
+        gain(1) = 0.25*G - 1; with G=16 the knee at tau=2 (joint=1) wins."""
+        m = self._model(k=10)
+        for _ in range(20):
+            m.observe_tool("f", 1.0)
+            m.observe_tool("f", 2.0)
+            m.observe_tool("g", 1.0)
+            m.observe_tool("g", 2.0)
+        m.t_bar.add(16.0)                           # G = 16 (eta=1, reload 0)
+        dec = m.solve_parallel(["f", "g"], prefill_reload=0.0)
+        assert dec.source == "parallel"
+        assert dec.ttl == pytest.approx(2.0)
+        # check the solver agrees with the closed-form joint gain
+        assert dec.gain == pytest.approx(1.0 * 16.0 - 2.0)
+
+    def test_partial_coverage_knee_preferred(self):
+        """Long tail on one tool: covering the tail is not worth it."""
+        m = self._model(k=10)
+        for _ in range(20):
+            m.observe_tool("f", 1.0)
+            m.observe_tool("g", 1.0)
+        for _ in range(20):
+            m.observe_tool("f", 500.0)              # heavy tail
+            m.observe_tool("g", 1.0)
+        m.t_bar.add(10.0)
+        dec = m.solve_parallel(["f", "g"], prefill_reload=0.0)
+        # tau=1: joint = 0.5 * 1.0 -> gain 0.5*10-1 = 4 > tau=500 gain 10-500
+        assert dec.ttl == pytest.approx(1.0)
+
+    def test_single_tool_falls_back_to_scalar_solver(self):
+        m = self._model(k=0)
+        for _ in range(5):
+            m.observe_tool("f", 1.0)
+        m.t_bar.add(10.0)
+        dec_par = m.solve_parallel(["f"], prefill_reload=0.0)
+        dec_seq = m.solve(["f"][0], prefill_reload=0.0)
+        assert dec_par.ttl == dec_seq.ttl
+        assert dec_par.source != "parallel"
+
+    def test_cold_start_path(self):
+        m = TTLModel(TTLConfig(cold_start_k=100, exp_unit_mean=1.0))
+        m.t_bar.add(math.e)
+        dec = m.solve_parallel(["f", "g"], prefill_reload=0.0)
+        assert dec.source == "cold_start"
+        assert dec.ttl == pytest.approx(1.0)        # u ln(G/u), G=e
+
+    def test_negative_gain_means_no_pin(self):
+        m = self._model(k=5)
+        for _ in range(10):
+            m.observe_tool("f", 100.0)
+            m.observe_tool("g", 100.0)
+        m.t_bar.add(0.5)                            # tiny benefit
+        dec = m.solve_parallel(["f", "g"], prefill_reload=0.0)
+        assert dec.ttl == 0.0 and dec.gain <= 0.0
+
+    def test_unknown_tool_uses_global_records(self):
+        m = self._model(k=5)
+        for _ in range(10):
+            m.observe_tool("f", 1.0)
+        m.t_bar.add(50.0)
+        dec = m.solve_parallel(["f", "never_seen"], prefill_reload=0.0)
+        # "never_seen" falls back to the global records => joint CDF > 0
+        assert dec.ttl > 0.0

