@@ -1,61 +1,86 @@
 """§Roofline: per (arch x shape x mesh) three-term roofline from the
 dry-run's compiled HLO (see repro/dist/roofline.py for methodology).
 
+Analyzes every saved dry-run artifact in experiments/dryrun/ (full
+pod-scale cells and --smoke cells alike — the .json sidecar carries the
+config flavor and the actual seq/batch the cell was lowered with).
+
 MODEL_FLOPS per cell:
-  train:   3 * 6 * N_active * tokens   (fwd+bwd = 3x fwd, 2*N per token fwd)
-           -- reported as 6*N*D per the assignment; the 3x is folded into
-              the useful-ratio denominator notes
+  train:   3 * 2 * N_active * tokens   (fwd+bwd = 3x fwd, 2*N per token fwd)
   prefill: 2 * N_active * tokens (+ attention quadratic term)
   decode:  2 * N_active * batch (+ KV-cache read is memory, not flops)
+
+Outputs:
+  experiments/roofline/baseline.json / baseline.md   (full rows + table)
+  experiments/bench/roofline.csv                     (flat CSV, one row/cell)
 """
+import csv
 import json
 import sys
 from pathlib import Path
 
 sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
-from repro.configs import SHAPES, get_config                 # noqa: E402
-from repro.configs.base import arch_shape_cells              # noqa: E402
+from repro.configs import get_config                          # noqa: E402
 from repro.dist.roofline import roofline                      # noqa: E402
 
 ART = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 OUT = Path(__file__).resolve().parents[1] / "experiments" / "roofline"
+BENCH_OUT = Path(__file__).resolve().parents[1] / "experiments" / "bench"
+
+CSV_FIELDS = ["arch", "shape", "mesh", "chips", "smoke", "kind",
+              "seq_len", "global_batch", "compute_s", "memory_s",
+              "collective_s", "bottleneck", "hlo_flops_per_dev",
+              "hbm_bytes_per_dev", "coll_bytes_per_dev", "model_flops",
+              "useful_ratio", "roofline_fraction", "peak_gib"]
 
 
-def model_flops(arch: str, shape_name: str) -> float:
-    cfg = get_config(arch)
-    shape = SHAPES[shape_name]
+def model_flops(rec: dict) -> float:
+    cfg = get_config(rec["arch"], smoke=rec.get("smoke", False))
+    kind = rec.get("kind", "train")
+    seq = rec.get("seq_len", 0)
+    batch = rec.get("global_batch", 0)
     n_act = cfg.active_param_count()
-    if shape.kind == "train":
-        tokens = shape.global_batch * shape.seq_len
-        return 6.0 * n_act * tokens
-    if shape.kind == "prefill":
-        tokens = shape.global_batch * shape.seq_len
+    if kind == "train":
+        return 3.0 * 2.0 * n_act * batch * seq
+    if kind == "prefill":
+        tokens = batch * seq
         flops = 2.0 * n_act * tokens
         # causal attention term: 2*2*kv_elems_per_token * S/2 per token
         kv_elems = cfg.kv_bytes_per_token(2) / 2
-        flops += 2.0 * tokens * (shape.seq_len / 2) * kv_elems
+        flops += 2.0 * tokens * (seq / 2) * kv_elems
         return flops
     # decode: one token per sequence
-    return 2.0 * n_act * shape.global_batch
+    return 2.0 * n_act * batch
 
 
-def analyze_cell(arch: str, shape_name: str, mesh_tag: str) -> dict | None:
-    stem = f"{arch}_{shape_name}_{mesh_tag}"
-    hlo = ART / f"{stem}.hlo.txt"
-    meta = ART / f"{stem}.json"
-    if not hlo.exists() or not meta.exists():
+def _legacy_fill(rec: dict) -> dict:
+    """Artifacts from before the smoke-cell metadata: derive kind/seq/batch
+    from the canonical SHAPES entry."""
+    if "kind" not in rec:
+        from repro.configs import SHAPES
+        shape = SHAPES[rec["shape"]]
+        rec = {**rec, "smoke": False, "kind": shape.kind,
+               "seq_len": shape.seq_len, "global_batch": shape.global_batch}
+    return rec
+
+
+def analyze_artifact(meta_path: Path, rec: dict) -> dict | None:
+    hlo = meta_path.parent / (meta_path.name[:-5] + ".hlo.txt")
+    if not hlo.exists():
         return None
-    rec = json.loads(meta.read_text())
+    rec = _legacy_fill(rec)
     chips = rec["chips"]
-    t = roofline(hlo.read_text(), chips=chips,
-                 model_flops=model_flops(arch, shape_name))
+    t = roofline(hlo.read_text(), chips=chips, model_flops=model_flops(rec))
     terms = {"compute": t.compute_s, "memory": t.memory_s,
              "collective": t.collective_s}
     dom = max(terms.values())
-    total = t.compute_s + t.memory_s + t.collective_s
     return {
-        "arch": arch, "shape": shape_name, "mesh": mesh_tag, "chips": chips,
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips, "smoke": rec.get("smoke", False),
+        "kind": rec.get("kind", ""), "seq_len": rec.get("seq_len", 0),
+        "global_batch": rec.get("global_batch", 0),
         "compute_s": t.compute_s, "memory_s": t.memory_s,
         "collective_s": t.collective_s, "bottleneck": t.bottleneck,
         "hlo_flops_per_dev": t.flops, "hbm_bytes_per_dev": t.bytes,
@@ -71,13 +96,15 @@ def analyze_cell(arch: str, shape_name: str, mesh_tag: str) -> dict | None:
     }
 
 
-def run(quick: bool = True, mesh_tags=("16x16",)) -> list[dict]:
+def run(quick: bool = True, mesh_tags=None) -> list[dict]:
     rows = []
-    for arch, shape in arch_shape_cells():
-        for tag in mesh_tags:
-            r = analyze_cell(arch, shape, tag)
-            if r:
-                rows.append(r)
+    for meta in sorted(ART.glob("*.json")):
+        rec = json.loads(meta.read_text())
+        if mesh_tags and rec.get("mesh") not in mesh_tags:
+            continue
+        r = analyze_artifact(meta, rec)
+        if r:
+            rows.append(r)
     OUT.mkdir(parents=True, exist_ok=True)
     ser = [{k: (v if not isinstance(v, list) else str(v)) for k, v in r.items()}
            for r in rows]
@@ -93,6 +120,13 @@ def run(quick: bool = True, mesh_tags=("16x16",)) -> list[dict]:
             f"{r['collective_s']:.2e} | {r['bottleneck']} | "
             f"{r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
     (OUT / "baseline.md").write_text("\n".join(lines))
+    # flat CSV for downstream tooling
+    BENCH_OUT.mkdir(parents=True, exist_ok=True)
+    with (BENCH_OUT / "roofline.csv").open("w", newline="") as fh:
+        w = csv.DictWriter(fh, fieldnames=CSV_FIELDS, extrasaction="ignore")
+        w.writeheader()
+        for r in rows:
+            w.writerow(r)
     from benchmarks.common import emit
     if rows:
         worst = min(rows, key=lambda r: r["roofline_fraction"])
@@ -106,7 +140,9 @@ def run(quick: bool = True, mesh_tags=("16x16",)) -> list[dict]:
 
 
 if __name__ == "__main__":
-    tags = ("16x16", "2x16x16") if "--all-meshes" in sys.argv else ("16x16",)
+    tags = None
+    if "--full-only" in sys.argv:
+        tags = ("16x16", "2x16x16")
     rows = run(quick=False, mesh_tags=tags)
     for r in rows:
         print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "

@@ -1,0 +1,12 @@
+"""Distributed substrate: logical-axis sharding rules and the HLO roofline
+analyzer.
+
+- :mod:`repro.dist.sharding` maps the *logical* axis names carried by
+  ``ParamSpec`` trees and activation ``constrain`` calls onto physical mesh
+  axes, with divisibility and duplicate-axis safety baked in.
+- :mod:`repro.dist.roofline` turns compiled HLO text into FLOP/byte/
+  collective costs (with while-loop trip-count correction) and a three-term
+  roofline — the measured substitute for hand-tuned cost-model coefficients
+  (``CostModel.from_roofline``).
+"""
+from repro.dist import roofline, sharding  # noqa: F401

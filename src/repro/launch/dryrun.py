@@ -8,7 +8,12 @@ and benches see 1 device.)
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape decode_32k
     PYTHONPATH=src python -m repro.launch.dryrun --all [--multipod-only]
-Artifacts (HLO text + stats JSON) go to experiments/dryrun/.
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-1.5b \
+        --shape decode_32k --smoke      # smoke config, 2x4 mesh, CPU-feasible
+Artifacts (HLO text + stats JSON) go to experiments/dryrun/. ``--smoke``
+compiles the reduced config on a small 2x4 mesh with scaled-down shapes —
+the artifacts exercise the same roofline pipeline (tests/test_roofline.py,
+benchmarks/bench_roofline.py) without a pod-scale compile.
 """
 import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
@@ -25,17 +30,27 @@ import traceback
 import jax
 
 from repro.configs.base import (SHAPES, arch_shape_cells, get_config, shape_for)
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import _make_mesh, make_production_mesh
 from repro.models.steps import build_step, input_specs  # noqa: F401 (public API)
 
 ART_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
 
 
 def run_cell(arch: str, shape_name: str, multi_pod: bool,
-             save_hlo: bool = True, verbose: bool = True) -> dict:
-    cfg = get_config(arch)
+             save_hlo: bool = True, verbose: bool = True,
+             smoke: bool = False) -> dict:
+    cfg = get_config(arch, smoke=smoke)
     shape = shape_for(shape_name)
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    if smoke:
+        import dataclasses as _dc
+        shape = _dc.replace(shape, name=shape.name + "-smoke",
+                            seq_len=min(shape.seq_len, 256),
+                            global_batch=max(min(shape.global_batch, 8), 2))
+        mesh = _make_mesh((2, 4), ("data", "model"))
+        mesh_tag = "2x4smoke"
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_tag = "2x16x16" if multi_pod else "16x16"
     t0 = time.time()
     built = build_step(cfg, mesh, shape)
     with mesh:
@@ -45,10 +60,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t2 = time.time()
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis()
-    mesh_tag = "2x16x16" if multi_pod else "16x16"
+    if isinstance(ca, (list, tuple)):         # older jax returns [dict]
+        ca = ca[0]
     rec = {
         "arch": arch,
         "shape": shape_name,
+        "smoke": smoke,
+        "kind": shape.kind,
+        "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
         "mesh": mesh_tag,
         "chips": int(len(mesh.devices.reshape(-1))),
         "lower_s": round(t1 - t0, 2),
@@ -90,6 +110,8 @@ def main() -> int:
     ap.add_argument("--multipod-only", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="smoke configs on a 2x4 mesh (CPU-feasible)")
     args = ap.parse_args()
 
     meshes = [False, True]
@@ -106,11 +128,15 @@ def main() -> int:
         assert args.arch and args.shape, "--arch and --shape (or --all)"
         cells = [(args.arch, args.shape)]
 
+    if args.smoke:
+        meshes = [False]
+
     failures = []
     for arch, shape_name in cells:
         for mp in meshes:
             try:
-                run_cell(arch, shape_name, mp, save_hlo=not args.no_hlo)
+                run_cell(arch, shape_name, mp, save_hlo=not args.no_hlo,
+                         smoke=args.smoke)
             except Exception:
                 failures.append((arch, shape_name, mp))
                 traceback.print_exc()

@@ -42,6 +42,11 @@ def main() -> int:
     ap.add_argument("--kv-budget-gb", type=float, default=40.0)
     ap.add_argument("--max-batch", type=int, default=48)
     ap.add_argument("--chunk-size", type=int, default=2048)
+    ap.add_argument("--cost-source", default="analytic",
+                    choices=("analytic", "roofline"),
+                    help="roofline: calibrate the TTL cost model from the "
+                         "compiled HLO of the real config (lower+compile "
+                         "only — scanned layers keep it seconds on CPU)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -52,11 +57,17 @@ def main() -> int:
                                      rate_jps=args.rate, seed=args.seed)
     off = OffloadConfig(dram_bytes=args.offload_gb * 1e9) \
         if args.offload_gb else None
+    # calibrate once and share: every replica serves the same model, so the
+    # roofline compile (the expensive part) must not repeat per engine
+    cost = None
+    if args.cost_source == "roofline":
+        from repro.serving.profiler import CostModel
+        cost = CostModel.from_roofline(cfg, chips=args.chips)
     engines = [Engine(cfg, EngineConfig(
         policy=args.policy, chips=args.chips, offload=off,
         max_batch=args.max_batch, chunk_size=args.chunk_size,
         kv_budget_bytes=args.kv_budget_gb * 1e9), HardwareProfile(),
-        engine_id=f"e{i}") for i in range(args.engines)]
+        cost=cost, engine_id=f"e{i}") for i in range(args.engines)]
     router = Router(engines, policy=args.router)
     s = run_workload(programs, engines, router, max_seconds=1e7)
     st = engines[0].scheduler.stats

@@ -71,6 +71,11 @@ class EngineConfig:
     prefix: Optional[PrefixConfig] = None  # cross-program shared-prefix KV
     ttl: TTLConfig = dataclasses.field(default_factory=TTLConfig)
     scheduler_overhead_s: float = 0.0    # per-step overhead (Table 4)
+    # "analytic": config-derived param counts (paper baseline).
+    # "roofline": calibrate the cost model from compiled HLO
+    #             (CostModel.from_roofline) — TTL's PrefillReload then uses
+    #             measured prefill-recompute seconds.
+    cost_source: str = "analytic"
 
 
 @dataclasses.dataclass
@@ -86,13 +91,21 @@ class Engine:
     def __init__(self, arch: ModelConfig, ecfg: EngineConfig,
                  hw: HardwareProfile = HardwareProfile(),
                  backend: ExecutionBackend | None = None,
+                 cost: CostModel | None = None,
                  engine_id: str = "engine0"):
         self.arch = arch
         self.ecfg = ecfg
         self.hw = hw
         self.engine_id = engine_id
-        self.profile = build_profile(arch, ecfg.chips)
-        self.cost = CostModel(self.profile, hw)
+        if cost is not None:            # pre-calibrated, shared across replicas
+            self.cost = cost
+            self.profile = cost.prof
+        elif ecfg.cost_source == "roofline":
+            self.cost = CostModel.from_roofline(arch, hw=hw, chips=ecfg.chips)
+            self.profile = self.cost.prof
+        else:
+            self.profile = build_profile(arch, ecfg.chips)
+            self.cost = CostModel(self.profile, hw)
         self.backend = backend or SimBackend(self.cost)
 
         # --- KV block pool sizing ---

@@ -65,6 +65,62 @@ class CostModel:
         self.prof = prof
         self.hw = hw
 
+    # ---- roofline-calibrated construction ---------------------------------
+    @classmethod
+    def from_roofline(cls, cfg: ModelConfig, mesh=None,
+                      hw: HardwareProfile = HardwareProfile(),
+                      chips: int = 1, prefill_tokens: int = 64,
+                      decode_batch: int = 4, decode_context: int = 128
+                      ) -> "CostModel":
+        """Build a cost model whose per-token FLOPs and per-step bytes are
+        *measured from compiled HLO* (via :mod:`repro.dist.roofline`)
+        instead of derived from the config's analytic param counts.
+
+        A small prefill step and a small decode step are lowered + compiled
+        for ``cfg`` on ``mesh`` (default: the local host mesh), analyzed
+        with the while-trip-count-corrected HLOAnalyzer, and the serving
+        profile is calibrated from the entry costs:
+
+        - ``flops_per_token``   <- prefill FLOPs / prefill tokens
+        - ``active_param_bytes``<- decode HBM bytes minus the KV-cache read
+        - ``kv_bytes_per_token``/``state_bytes`` stay exact-from-config
+          (they are structural, not measured).
+
+        This is the robust version of the paper's offline profile: the TTL
+        model's PrefillReload(r) then reflects what the compiled graph
+        actually does (scan trip counts, fused attention, MoE dispatch)
+        rather than hand-tuned coefficients.
+        """
+        from repro.dist.roofline import HLOAnalyzer
+        from repro.launch.mesh import make_host_mesh
+        from repro.models.steps import build_decode_step, build_prefill_step
+        from repro.configs.base import ShapeSpec
+
+        mesh = mesh if mesh is not None else make_host_mesh()
+        with mesh:
+            p_step = build_prefill_step(
+                cfg, mesh, ShapeSpec("cal_p", "prefill", prefill_tokens, 1))
+            p_cost = HLOAnalyzer(
+                p_step.lower().compile().as_text()).entry_cost()
+            d_step = build_decode_step(
+                cfg, mesh, ShapeSpec("cal_d", "decode", decode_context,
+                                     decode_batch))
+            d_cost = HLOAnalyzer(
+                d_step.lower().compile().as_text()).entry_cost()
+
+        kvpt = cfg.kv_bytes_per_token(2)
+        state = cfg.state_bytes()
+        kv_read = decode_batch * (decode_context * kvpt + state)
+        prof = ModelServingProfile(
+            param_bytes=2.0 * cfg.param_count(),
+            active_param_bytes=max(d_cost.bytes - kv_read, 1.0),
+            kv_bytes_per_token=kvpt,
+            state_bytes=state,
+            flops_per_token=p_cost.flops / prefill_tokens,
+            chips=chips,
+        )
+        return cls(prof, hw)
+
     # ---- primitive costs -------------------------------------------------
     def prefill_seconds(self, tokens: int, context: int = 0) -> float:
         """Prefill `tokens` new tokens on top of `context` cached tokens."""

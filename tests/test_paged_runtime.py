@@ -6,12 +6,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem absent in this "
-                           "checkout (models depend on it)")
-from repro.configs import get_config  # noqa: E402
-from repro.models import Model  # noqa: E402
-from repro.serving.paged_runtime import PagedKVRuntime  # noqa: E402
+from repro.configs import get_config
+from repro.models import Model
+from repro.serving.paged_runtime import PagedKVRuntime
 
 
 @pytest.fixture(scope="module")

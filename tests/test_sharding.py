@@ -3,12 +3,9 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem absent in this "
-                           "checkout")
-from repro.configs import get_config  # noqa: E402
-from repro.dist.sharding import default_rules, logical_to_spec  # noqa: E402
-from repro.launch.mesh import make_host_mesh  # noqa: E402
+from repro.configs import get_config
+from repro.dist.sharding import default_rules, logical_to_spec
+from repro.launch.mesh import make_host_mesh
 
 
 @pytest.fixture(scope="module")
@@ -85,3 +82,73 @@ class TestDefaultRules:
             shape = {"data": 16, "model": 16}
         r = default_rules(cfg, M(), step_kind="decode_long")
         assert r["act_batch"] is None                  # batch=1: nothing to shard
+
+
+# ---------------------------------------------------------------------------
+# property test: logical_to_spec invariants hold for arbitrary rules/shapes.
+# Runs under hypothesis when installed; falls back to a seeded random sweep
+# so the invariants are exercised on minimal-dependency checkouts too.
+# ---------------------------------------------------------------------------
+_MESH_AXES = ("pod", "data", "model")
+
+
+def _rand_case(rng):
+    """(axes, rules, shape, mesh) drawn from rng (random.Random-like)."""
+    class M:
+        axis_names = _MESH_AXES
+        shape = {a: rng.choice([1, 2, 3, 4, 8, 16]) for a in _MESH_AXES}
+
+    names = [f"ax{i}" for i in range(rng.randint(1, 5))]
+    rules = {}
+    for n in names:
+        kind = rng.randint(0, 3)
+        if kind == 0:
+            rules[n] = None
+        elif kind == 1:
+            rules[n] = rng.choice(_MESH_AXES)
+        else:
+            # with replacement: a rule tuple may repeat a mesh axis, and
+            # logical_to_spec must still emit each axis at most once
+            k = rng.randint(1, 3)
+            rules[n] = tuple(rng.choice(_MESH_AXES) for _ in range(k))
+    # duplicate logical axes + None entries in the tensor's axis tuple
+    axes = tuple(rng.choice(names + [None]) for _ in range(rng.randint(1, 6)))
+    shape = tuple(rng.choice([1, 2, 3, 5, 7, 8, 12, 16, 24, 64, 96, 256])
+                  for _ in axes)
+    return axes, rules, shape, M()
+
+
+def _check_invariants(axes, rules, shape, mesh):
+    spec = logical_to_spec(axes, rules, shape=shape, mesh=mesh)
+    assert len(spec) == len(axes)
+    seen = []
+    for dim, entry in zip(shape, spec):
+        if entry is None:
+            continue
+        group = list(entry) if isinstance(entry, tuple) else [entry]
+        prod = 1
+        for a in group:
+            assert a in mesh.axis_names
+            seen.append(a)
+            prod *= mesh.shape[a]
+        assert dim % prod == 0, (axes, rules, shape, spec)
+    assert len(seen) == len(set(seen)), (axes, rules, shape, spec)  # no repeats
+
+
+def test_logical_to_spec_property_fuzz():
+    import random
+    rng = random.Random(0)
+    for _ in range(500):
+        _check_invariants(*_rand_case(rng))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=0, max_value=2**63 - 1))
+    @settings(max_examples=200, deadline=None)
+    def test_logical_to_spec_property_hypothesis(seed):
+        import random
+        _check_invariants(*_rand_case(random.Random(seed)))
+except ImportError:                     # optional dep; fuzz test above runs
+    pass

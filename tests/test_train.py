@@ -6,15 +6,12 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-pytest.importorskip("repro.dist",
-                    reason="repro.dist sharding subsystem absent in this "
-                           "checkout (train loop depends on it)")
-from repro.configs.base import ShapeSpec, get_config  # noqa: E402
-from repro.launch.mesh import make_host_mesh  # noqa: E402
-from repro.train import optimizer as opt_mod  # noqa: E402
-from repro.train.compression import (CompressionConfig, compress_grads,  # noqa: E402
+from repro.configs.base import ShapeSpec, get_config
+from repro.launch.mesh import make_host_mesh
+from repro.train import optimizer as opt_mod
+from repro.train.compression import (CompressionConfig, compress_grads,
                                      init_error_state)
-from repro.train.train_loop import TrainConfig, Trainer  # noqa: E402
+from repro.train.train_loop import TrainConfig, Trainer
 
 
 def make_trainer(tmp_path, steps=30, seed=0, ckpt_every=10):
