@@ -1,0 +1,55 @@
+"""Tiered KV store sweep: TTL-expiry demotion (HBM→DRAM→SSD) vs dropping.
+
+Baseline is `continuum` with no offload tier: a TTL expiry *drops* the
+context and the program's next turn pays a full prefill recompute. The
+sweep runs the same workload with the tiered store enabled at increasing
+DRAM capacities (plus one DRAM+SSD spillover point): expiries *demote*
+to host DRAM instead (async D2H on the transfer timeline) and the next
+turn reloads, with reload seconds priced by the `TransferEngine` against
+in-flight transfer state. Reported per row: mean/tail JCT, tier-hit
+ratio (reloads / context-restoration events), and the reload-vs-recompute
+seconds actually paid.
+"""
+from benchmarks.common import emit, run_one, save_rows
+
+KV_BUDGET = 10e9          # contended HBM pool: expiries actually happen
+DRAM_SWEEP = (1e9, 2e9, 5e9, 10e9, 25e9)   # pressure → comfortable
+
+
+def _row(policy, dram, ssd, **kw):
+    r = run_one(policy, offload=dram or None, ssd=ssd,
+                kv_budget=KV_BUDGET, **kw)
+    restored = r["reloads"] + r["full_recomputes"]
+    return {**r, "dram_gb": dram / 1e9, "ssd_gb": ssd / 1e9,
+            "tier_hit": r["reloads"] / restored if restored else 0.0}
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 100
+    kw = dict(n=n, rate=0.06)
+    rows = [_row("continuum", 0.0, 0.0, **kw)]            # drop-on-expiry
+    for dram in DRAM_SWEEP:
+        rows.append(_row("continuum", dram, 0.0, **kw))
+    rows.append(_row("continuum", 2e9, 50e9, **kw))       # SSD spillover
+    save_rows("kvstore", rows)
+
+    base = rows[0]
+    best = min(rows[1:], key=lambda r: r["avg_jct"])
+    emit("kvstore.jct_speedup_vs_no_offload",
+         base["avg_jct"] / max(best["avg_jct"], 1e-9),
+         f"no_offload={base['avg_jct']:.0f}s "
+         f"dram{best['dram_gb']:.0f}+ssd{best['ssd_gb']:.0f}="
+         f"{best['avg_jct']:.0f}s")
+    emit("kvstore.tier_hit_ratio", best["tier_hit"],
+         f"reloads={best['reloads']} recomputes={best['full_recomputes']} "
+         f"demotions={best['demotions']}")
+    emit("kvstore.reload_vs_recompute_s", best["reload_s"],
+         f"reload={best['reload_s']:.1f}s (TransferEngine) vs "
+         f"recompute_paid={best['recompute_s']:.1f}s "
+         f"baseline_recompute={base['recompute_s']:.1f}s "
+         f"h2d={best['h2d_gb']:.1f}GB")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

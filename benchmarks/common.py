@@ -73,6 +73,14 @@ def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
             "preemptions": stats.preemptions,
             "prefix_hits": sum(e.scheduler.stats.prefix_hits
                                for e in engines),
+            # tiered-kvstore counters (all 0 when offload is disabled)
+            "demotions": stats.demotions,
+            "reloads": stats.offload_reloads,
+            "full_recomputes": stats.full_recomputes,
+            "reload_s": stats.reload_seconds,
+            "recompute_s": stats.recompute_seconds,
+            "h2d_gb": (engines[0].kvstore.transfer.h2d.bytes_moved / 1e9
+                       if engines[0].kvstore is not None else 0.0),
             "wall_s": wall}
 
 

@@ -10,7 +10,7 @@ import time
 def main() -> None:
     quick = "--full" not in sys.argv
     from benchmarks import (bench_ablation, bench_distributed, bench_e2e,
-                            bench_memoryfulness,
+                            bench_kvstore, bench_memoryfulness,
                             bench_offload, bench_overhead,
                             bench_prefix_sharing, bench_roofline,
                             bench_rollout, bench_sensitivity, bench_tail,
@@ -19,6 +19,7 @@ def main() -> None:
         ("fig8_e2e", bench_e2e.run),
         ("prefix_sharing", bench_prefix_sharing.run),
         ("fig10_offload", bench_offload.run),
+        ("kvstore", bench_kvstore.run),
         ("fig11_tail", bench_tail.run),
         ("fig12_distributed", bench_distributed.run),
         ("fig13_sensitivity", bench_sensitivity.run),

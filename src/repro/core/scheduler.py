@@ -50,6 +50,10 @@ class SchedulerStats:
     full_recomputes: int = 0
     prefix_hits: int = 0           # admissions served from the radix index
     prefix_hit_tokens: int = 0     # prompt tokens covered by those matches
+    reload_seconds: float = 0.0    # link time paid by offload-tier reloads
+    recompute_seconds: float = 0.0  # est. prefill time paid by full recomputes
+    demotions: int = 0             # TTL expiries demoted to a lower tier
+                                   # (instead of dropped)
 
 
 class Scheduler:
@@ -68,6 +72,13 @@ class Scheduler:
         self.program_turns: dict[str, int] = {}
         self.stats = SchedulerStats()
         self.on_evict: Optional[Callable[[str], None]] = None  # backend hook
+        # tiered-store backend hooks: a demotion keeps the KV (host copy)
+        # while an eviction genuinely loses it; a reload restores it
+        self.on_demote: Optional[Callable[[str], None]] = None
+        self.on_reload: Optional[Callable[[str], None]] = None
+        # engine-wired estimator: prefill seconds for a token count (prices
+        # the recompute a TTL/offload miss causes — bench/metrics signal)
+        self.recompute_estimate_fn: Optional[Callable[[int], float]] = None
 
     # ----------------------------------------------------------- Algorithm 1
     def on_request_arrive(self, req: Request, now: float) -> None:
@@ -87,8 +98,8 @@ class Scheduler:
             # last request of its program: free KV + any leftover pin. The
             # program will never return, so nothing is offloaded (and any
             # stale offload entry is dropped to reclaim tier capacity).
-            self._free_finished(req, final=True)
-            self._unpin(req.program_id, reason="program_done")
+            self._free_finished(req, now, final=True)
+            self._unpin(req.program_id, reason="program_done", now=now)
             self.handler.on_program_finish(req.program_id,
                                            self.program_turns.get(req.program_id,
                                                                   req.turn_idx + 1))
@@ -105,22 +116,36 @@ class Scheduler:
             req.prefix_node = None
             self.stats.pins += 1
             return {"pinned": True, "ttl": decision.ttl, "blocks": n}
-        self._free_finished(req)
+        self._free_finished(req, now)
         return {"pinned": False, "ttl": 0.0}
 
-    def _free_finished(self, req: Request, final: bool = False) -> None:
+    def _free_finished(self, req: Request, now: float,
+                       final: bool = False) -> None:
         self.blocks.free_request(req.request_id)
         self._release_prefix(req)
+        demoted = False
         if self.offload is not None:
             if final:
                 # program finished: no future turn will ever reload this KV
                 self.offload.drop(req.program_id)
             else:
                 tokens = req.prompt_len + req.generated
-                self.offload.offload(req.program_id, tokens,
-                                     tokens * self._kv_bytes_per_token)
+                demoted = self.offload.offload(
+                    req.program_id, tokens,
+                    tokens * self._kv_bytes_per_token, now=now) is not None
+        self._notify_release(req.program_id, demoted)
+
+    def _notify_release(self, program_id: str, demoted: bool) -> None:
+        """Tell the execution backend what happened to the program's HBM
+        KV: demoted (a lower tier holds it — keep a host copy) vs evicted
+        (genuinely gone)."""
+        if demoted:
+            self.stats.demotions += 1
+            if self.on_demote is not None:
+                self.on_demote(program_id)
+                return
         if self.on_evict is not None:
-            self.on_evict(req.program_id)
+            self.on_evict(program_id)
 
     def _release_prefix(self, req: Request) -> None:
         if self.prefix_index is not None and req.prefix_node is not None:
@@ -136,10 +161,10 @@ class Scheduler:
         for pid in list(self.pinned):
             e = self.pinned[pid]
             if now > e.expiry and pid not in in_queue:
-                self._unpin(pid, reason="ttl_expired")
+                self._unpin(pid, reason="ttl_expired", now=now)
                 self.stats.ttl_expiries += 1
 
-    def _unpin(self, program_id: str, reason: str) -> int:
+    def _unpin(self, program_id: str, reason: str, now: float = 0.0) -> int:
         e = self.pinned.pop(program_id, None)
         if e is None:
             return 0
@@ -148,11 +173,14 @@ class Scheduler:
             # the shared path stays cached but is no longer pin-protected
             self.prefix_index.release(e.prefix_node)
             e.prefix_node = None
+        demoted = False
         if self.offload is not None and n and reason != "program_done":
-            self.offload.offload(program_id, e.tokens,
-                                 e.tokens * self._kv_bytes_per_token)
-        if self.on_evict is not None:
-            self.on_evict(program_id)
+            # TTL expiry demotes HBM→DRAM (async write on the transfer
+            # timeline) instead of dropping the context
+            demoted = self.offload.offload(
+                program_id, e.tokens,
+                e.tokens * self._kv_bytes_per_token, now=now) is not None
+        self._notify_release(program_id, demoted)
         return n
 
     # ------------------------------------------------------------ selection
@@ -180,17 +208,25 @@ class Scheduler:
         return min(blocks * self.blocks.cfg.block_size,
                    max(req.prompt_len - 1, 0))
 
-    def _offload_tokens(self, req: Request) -> int:
-        entry = self.offload.lookup(req.program_id) if self.offload else None
-        return min(entry.tokens, req.prompt_len) if entry is not None else 0
+    def _offload_tokens(self, req: Request, now: float = 0.0) -> int:
+        """Tier-resident prefix tokens: only blocks still resident count
+        (suffix blocks demoted-then-dropped shrink the usable prefix and
+        the uncovered remainder is recomputed). Capped at prompt_len - 1
+        like the pin/radix sources, so a reloaded request always has ≥1
+        prefill token — the step that runs it is the step that pays its
+        ``reload_seconds``."""
+        entry = self.offload.lookup(req.program_id, now) \
+            if self.offload else None
+        return min(entry.tokens, max(req.prompt_len - 1, 0)) \
+            if entry is not None else 0
 
-    def _admit_need(self, req: Request) -> int:
+    def _admit_need(self, req: Request, now: float = 0.0) -> int:
         """Blocks `admit` would reserve for `req` (for deadlock sizing).
         Mirrors admit()'s source selection exactly: an offload win charges
         the full prompt (the reloaded KV needs its blocks)."""
         pin_t = self._pin_tokens(req)
         radix_t = self._radix_tokens(req)
-        off_t = self._offload_tokens(req)
+        off_t = self._offload_tokens(req, now)
         if pin_t >= max(radix_t, off_t) and pin_t > 0:
             need = self.blocks.blocks_for_tokens(req.prompt_len - pin_t)
             return max(0, need - self.blocks.cfg.state_blocks)
@@ -210,7 +246,7 @@ class Scheduler:
         """
         pin_t = self._pin_tokens(req)
         radix_t = self._radix_tokens(req)
-        off_t = self._offload_tokens(req)
+        off_t = self._offload_tokens(req, now)
         if pin_t >= max(radix_t, off_t) and pin_t > 0:
             source, cached = "pin", pin_t
         elif radix_t >= off_t and radix_t > 0:
@@ -260,13 +296,25 @@ class Scheduler:
             self.stats.prefix_hits += 1
             self.stats.prefix_hit_tokens += req.cached_prefix
         elif source == "offload":
-            # reloaded prefix skips prefill compute but pays link time
-            req.reload_seconds = self.offload.reload_seconds(req.program_id)
+            # reloaded prefix skips prefill compute but pays link time:
+            # begin_reload commits the H2D (and SSD→DRAM) transfers on the
+            # timeline and consumes the tier entry
+            req.reload_seconds = self.offload.begin_reload(
+                req.program_id, now) or 0.0
             req.cached_prefix = cached
-            self.offload.drop(req.program_id)
             self.stats.offload_reloads += 1
-        elif req.turn_idx > 0:
-            self.stats.full_recomputes += 1
+            self.stats.reload_seconds += req.reload_seconds
+            if self.on_reload is not None:
+                self.on_reload(req.program_id)
+        else:
+            # full recompute: clear any reload debt left from an earlier
+            # offload admission of this (since preempted) request
+            req.reload_seconds = 0.0
+            if req.turn_idx > 0:
+                self.stats.full_recomputes += 1
+                if self.recompute_estimate_fn is not None:
+                    self.stats.recompute_seconds += \
+                        self.recompute_estimate_fn(req.prompt_len)
         if need:
             self.blocks.allocate(req.request_id, need)
         self.waiting.remove(req)
@@ -317,7 +365,8 @@ class Scheduler:
         for v in victims:
             if self.blocks.can_allocate(need_blocks):
                 break
-            freed += self._unpin(v.program_id, reason="deadlock_victim")
+            freed += self._unpin(v.program_id, reason="deadlock_victim",
+                                 now=now)
             self.stats.deadlock_evictions += 1
         return freed
 
@@ -334,7 +383,7 @@ class Scheduler:
                 break
             if not self.admit(req, now):
                 # deadlock prevention: free pinned victims, retry once
-                need = self._admit_need(req)
+                need = self._admit_need(req, now)
                 if self.pinned:
                     self.free_victims(need, now)
                     if self.admit(req, now):

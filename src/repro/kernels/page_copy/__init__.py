@@ -1,0 +1,7 @@
+from repro.kernels.page_copy.ops import (copy_pages, gather_pages,
+                                         scatter_pages)
+from repro.kernels.page_copy.ref import (copy_pages_ref, page_gather_ref,
+                                         page_scatter_ref)
+
+__all__ = ["copy_pages", "gather_pages", "scatter_pages",
+           "copy_pages_ref", "page_gather_ref", "page_scatter_ref"]

@@ -1,0 +1,90 @@
+"""Pallas TPU page gather/scatter for KV tier moves.
+
+Tier demotion (HBM→DRAM) and promotion (DRAM→HBM) move a program's KV
+pages, but those pages are *scattered* across the physical pools —
+issuing one small DMA per page would serialize on link latency. These
+kernels batch the indirection: the page-id table rides as a
+scalar-prefetch operand, and each grid step's source (gather) or
+destination (scatter) page is selected by the *index map* reading the
+table — the indirection is resolved in the DMA engine, never in the
+compute path (same scalar-prefetch design as the paged decode kernel).
+
+- ``page_gather_kernel``: scattered pages → one contiguous staging
+  buffer, ready for a single bulk D2H transfer.
+- ``page_scatter_kernel``: a contiguous staging buffer (e.g. just
+  reloaded H2D) → scattered physical pages. The pool is aliased
+  in-place (``input_output_aliases``), so untouched pages keep their
+  contents — which is also what makes this the copy-on-write split
+  primitive: gather the shared page, scatter into the fresh one.
+
+Layout is the pools' native (L, P, page, KV, Dh); grid (n, L) with one
+(page, KV, Dh) block per step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _copy_kernel(tab_ref, src_ref, dst_ref):
+    dst_ref[...] = src_ref[...]
+
+
+def _scatter_kernel(tab_ref, staging_ref, pool_ref, out_ref):
+    out_ref[...] = staging_ref[...]
+
+
+def page_gather_kernel(pages, page_ids, *, interpret: bool = True):
+    """pages (L, P, page, KV, Dh); page_ids (n,) int32 →
+    staging (L, n, page, KV, Dh): staging[:, i] = pages[:, page_ids[i]]."""
+    L, P, page, KV, Dh = pages.shape
+    n = page_ids.shape[0]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                        # the page-id table
+        grid=(n, L),
+        in_specs=[
+            # the DMA index map reads the table: page indirection in-engine
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda i, l, tab: (l, tab[i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, KV, Dh),
+                               lambda i, l, tab: (l, i, 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _copy_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((L, n, page, KV, Dh), pages.dtype),
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), pages)
+
+
+def page_scatter_kernel(pages, staging, page_ids, *, interpret: bool = True):
+    """pages (L, P, page, KV, Dh); staging (L, n, page, KV, Dh);
+    page_ids (n,) int32 → pages with pages[:, page_ids[i]] = staging[:, i]
+    (pool aliased in place; other pages untouched)."""
+    L, P, page, KV, Dh = pages.shape
+    n = page_ids.shape[0]
+    assert staging.shape == (L, n, page, KV, Dh), (staging.shape, pages.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n, L),
+        in_specs=[
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda i, l, tab: (l, i, 0, 0, 0)),
+            # the pool rides along only to be aliased into the output;
+            # its block mapping mirrors the output's so the pair is 1:1
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda i, l, tab: (l, tab[i], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, page, KV, Dh),
+                               lambda i, l, tab: (l, tab[i], 0, 0, 0)),
+    )
+    return pl.pallas_call(
+        _scatter_kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        # operand 2 (after the scalar table and staging) is the pool;
+        # alias it so unvisited pages keep their contents
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), staging, pages)

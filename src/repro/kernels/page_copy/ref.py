@@ -1,0 +1,20 @@
+"""Pure-jnp oracles for the page gather/scatter kernels."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def page_gather_ref(pages, page_ids) -> jnp.ndarray:
+    """pages (L, P, page, KV, Dh); page_ids (n,) → (L, n, page, KV, Dh)."""
+    return pages[:, page_ids]
+
+
+def page_scatter_ref(pages, staging, page_ids) -> jnp.ndarray:
+    """pages (L, P, page, KV, Dh); staging (L, n, page, KV, Dh);
+    page_ids (n,) → pages with rows page_ids replaced by staging."""
+    return pages.at[:, page_ids].set(staging)
+
+
+def copy_pages_ref(pages, src_ids, dst_ids) -> jnp.ndarray:
+    """pages[:, dst_ids[i]] = pages[:, src_ids[i]] (COW split oracle)."""
+    return pages.at[:, dst_ids].set(pages[:, src_ids])

@@ -38,7 +38,10 @@ def main() -> int:
     ap.add_argument("--engines", type=int, default=1)
     ap.add_argument("--router", default="session",
                     choices=("session", "round_robin", "least_loaded"))
-    ap.add_argument("--offload-gb", type=float, default=0.0)
+    ap.add_argument("--offload-gb", type=float, default=0.0,
+                    help="host-DRAM tier capacity (0 = offload disabled)")
+    ap.add_argument("--ssd-gb", type=float, default=0.0,
+                    help="SSD spillover tier below DRAM (needs --offload-gb)")
     ap.add_argument("--kv-budget-gb", type=float, default=40.0)
     ap.add_argument("--max-batch", type=int, default=48)
     ap.add_argument("--chunk-size", type=int, default=2048)
@@ -55,7 +58,8 @@ def main() -> int:
     else:
         programs = generate_programs(WORKLOADS[args.workload], n=args.n,
                                      rate_jps=args.rate, seed=args.seed)
-    off = OffloadConfig(dram_bytes=args.offload_gb * 1e9) \
+    off = OffloadConfig(dram_bytes=args.offload_gb * 1e9,
+                        ssd_bytes=args.ssd_gb * 1e9) \
         if args.offload_gb else None
     # calibrate once and share: every replica serves the same model, so the
     # roofline compile (the expensive part) must not repeat per engine
@@ -71,7 +75,7 @@ def main() -> int:
     router = Router(engines, policy=args.router)
     s = run_workload(programs, engines, router, max_seconds=1e7)
     st = engines[0].scheduler.stats
-    print(json.dumps({
+    out = {
         "policy": args.policy, "n_programs": s.n_programs,
         "avg_jct_s": round(s.avg_jct, 1), "p95_jct_s": round(s.p95_jct, 1),
         "throughput_jobs_per_min": round(s.throughput_jobs_per_s * 60, 2),
@@ -79,7 +83,20 @@ def main() -> int:
         "ttl": {"pins": st.pins, "hits": st.ttl_hits,
                 "expiries": st.ttl_expiries,
                 "deadlock_evictions": st.deadlock_evictions},
-    }, indent=1))
+    }
+    if engines[0].kvstore is not None:
+        ks = engines[0].kvstore
+        out["kvstore"] = {
+            "demotions": st.demotions,
+            "reloads": st.offload_reloads,
+            "reload_seconds": round(st.reload_seconds, 1),
+            "recompute_seconds": round(st.recompute_seconds, 1),
+            "tier_usage": {t: ks.usage()[t]["used_blocks"]
+                           for t in ("dram", "ssd")},
+            "bytes_moved": {c: round(v["bytes_moved"] / 1e9, 2)
+                            for c, v in ks.transfer.usage().items()},
+        }
+    print(json.dumps(out, indent=1))
     return 0
 
 

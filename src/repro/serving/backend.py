@@ -38,9 +38,12 @@ class JaxModelBackend:
         self.max_len = max_len
         self.caches: dict[str, tuple] = {}      # program_id -> (cache, length)
         self.tokens: dict[str, jax.Array] = {}  # program_id -> generated ids
+        self.host_caches: dict[str, tuple] = {}  # demoted to host DRAM
         self._rng = rng
         self.prefill_tokens_computed = 0        # TTL savings show up here
         self.decode_tokens_computed = 0
+        self.demotions = 0
+        self.restores = 0
 
     def _prompt_tokens(self, req, length: int) -> jax.Array:
         key = jax.random.fold_in(self._rng, req.request_id)
@@ -49,6 +52,34 @@ class JaxModelBackend:
     def drop_program(self, program_id: str) -> None:
         """Called on eviction/unpin: the cache is genuinely gone."""
         self.caches.pop(program_id, None)
+        self.host_caches.pop(program_id, None)
+
+    def drop_host_copy(self, program_id: str) -> None:
+        """Tier-store eviction (LRU pressure victim): only the host copy
+        dies; any live device cache stays untouched."""
+        self.host_caches.pop(program_id, None)
+
+    # ----------------------------------------------- tiered-store hooks
+    def offload_program(self, program_id: str) -> None:
+        """TTL-expiry demotion: the device cache moves to a host (numpy)
+        copy — HBM is freed, the context is NOT lost. Paired with the
+        TieredKVStore entry the scheduler created for this program."""
+        entry = self.caches.pop(program_id, None)
+        if entry is not None:
+            cache, length = entry
+            self.host_caches[program_id] = (
+                jax.tree_util.tree_map(np.asarray, cache), length)
+            self.demotions += 1
+
+    def restore_program(self, program_id: str) -> None:
+        """Offload-tier reload: put the host copy back on device; the
+        next turn decodes against it instead of recomputing."""
+        entry = self.host_caches.pop(program_id, None)
+        if entry is not None:
+            cache, length = entry
+            self.caches[program_id] = (
+                jax.tree_util.tree_map(jnp.asarray, cache), length)
+            self.restores += 1
 
     @staticmethod
     def _bucket(n: int) -> int:

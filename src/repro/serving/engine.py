@@ -124,8 +124,15 @@ class Engine:
                                                state_blocks=state_blocks))
         self.block_bytes = block_bytes
 
-        # --- offload tiers ---
-        self.offload = OffloadManager(ecfg.offload) if ecfg.offload else None
+        # --- offload tiers (tiered kvstore behind the legacy facade) ---
+        self.offload = None
+        self.kvstore = None
+        if ecfg.offload:
+            # store accounting blocks match the engine's KV blocks
+            ocfg = dataclasses.replace(ecfg.offload,
+                                       block_bytes=self.block_bytes)
+            self.offload = OffloadManager(ocfg)
+            self.kvstore = self.offload.store
 
         # --- cross-program shared-prefix index (radix over block hashes) ---
         self.prefix_index: Optional[RadixPrefixIndex] = None
@@ -136,9 +143,12 @@ class Engine:
             self.prefix_index = RadixPrefixIndex(pcfg, self.blocks)
 
         # --- TTL model + tool handler (profiler-backed PrefillReload) ---
+        # reload seconds come from live TransferEngine state (queues +
+        # in-flight writes), not a static nbytes/bw formula
+        self.clock = 0.0
         coef = self.cost.fit_prefill_quadratic(arch.max_seq_len)
         reload_fn = make_prefill_reload_fn(
-            self.cost, coef, self.offload is not None, hw.h2d_bw)
+            self.cost, coef, store=self.kvstore, clock=lambda: self.clock)
         handler = ToolCallHandler(TTLModel(ecfg.ttl), prefill_reload_fn=reload_fn)
         self.prefill_coef = coef
 
@@ -146,8 +156,22 @@ class Engine:
         self.scheduler = Scheduler(policy, handler, self.blocks, self.offload,
                                    prefix_index=self.prefix_index)
         self.scheduler._kv_bytes_per_token = kvpt if kvpt > 0 else block_bytes
+        self.scheduler.recompute_estimate_fn = \
+            lambda tokens: CostModel.quadratic_prefill_seconds(coef, tokens)
         if hasattr(self.backend, "drop_program"):
             self.scheduler.on_evict = self.backend.drop_program
+        if self.kvstore is not None:
+            # real backends keep a host copy on demotion and restore it on
+            # reload; eviction remains a genuine loss
+            if hasattr(self.backend, "offload_program"):
+                self.scheduler.on_demote = self.backend.offload_program
+            if hasattr(self.backend, "restore_program"):
+                self.scheduler.on_reload = self.backend.restore_program
+            if hasattr(self.backend, "drop_host_copy"):
+                # pressure victims the store evicts (LRU drop with no SSD
+                # room) must release the backend's host copy too — the
+                # scheduler only sees the program it is currently freeing
+                self.kvstore.on_drop = self.backend.drop_host_copy
 
         self.running: list[Request] = []
         self.programs: dict[str, ProgramStats] = {}
@@ -185,6 +209,7 @@ class Engine:
     # ----------------------------------------------------------------- step
     def step(self, now: float) -> StepEvents:
         ev = StepEvents()
+        self.clock = now            # anchors TransferEngine-based pricing
         # 1. admission (Algorithm 1 Schedule())
         cap = self.ecfg.max_batch - len(self.running)
         if cap > 0:
@@ -219,6 +244,8 @@ class Engine:
         # 3. decode block growth (+ preemption on OOM; unreferenced shared
         #    prefix cache is reclaimed first — cheaper than preempting)
         for r in list(decode_reqs):
+            if r not in decode_reqs:    # preempted as an earlier r's victim
+                continue
             pos = r.prompt_len + r.generated
             if pos % self.ecfg.block_size == 0 and self.profile.kv_bytes_per_token > 0:
                 while not self.blocks.extend(r.request_id, 1):
@@ -231,9 +258,11 @@ class Engine:
                     if victim in decode_reqs:
                         decode_reqs.remove(victim)
 
-        # 4. execute
+        # 4. execute. Tier reloads are DMA transfers on their own channels,
+        # so they overlap the step's compute; only the slower of the two
+        # paces the step (LMCache-style async offload, paper §5.2).
         dur = self.backend.execute(prefill_work, decode_reqs)
-        dur += reload_penalty + self.ecfg.scheduler_overhead_s
+        dur = max(dur, reload_penalty) + self.ecfg.scheduler_overhead_s
         ev.duration = dur
         self.busy_seconds += dur
         self.steps += 1
@@ -313,7 +342,8 @@ class Engine:
         if self.offload is not None:
             tokens = r.prefill_pos + r.generated
             self.offload.offload(r.program_id, tokens,
-                                 tokens * self.profile.kv_bytes_per_token)
+                                 tokens * self.profile.kv_bytes_per_token,
+                                 now=now)
         r.state = RequestState.PREEMPTED
         r.prefill_pos = 0
         r.cached_prefix = 0

@@ -1,0 +1,25 @@
+"""Tiered physical KV store: HBM pages + host DRAM + SSD behind one
+block-granular API.
+
+- :mod:`repro.serving.kvstore.transfer` — event-timeline model of the
+  copy channels (H2D/D2H/SSD read/write): per-direction queues,
+  bandwidth + latency, overlap with compute. Reload seconds come from
+  in-flight transfer state, not a static ``nbytes / bw`` formula.
+- :mod:`repro.serving.kvstore.store` — :class:`TieredKVStore`, the
+  block-granular DRAM/SSD residency tracker with async TTL demotion
+  (HBM→DRAM on expiry, DRAM→SSD under pressure, suffix trimming when
+  full) and queue-aware reload pricing.
+
+HBM itself stays owned by :class:`~repro.serving.blocks.BlockManager`
+(accounting) and :class:`~repro.serving.paged_runtime.PagedKVRuntime`
+(physical pages, COW prefix sharing); the store owns everything below
+the HBM line and the transfers across it.
+"""
+from repro.serving.kvstore.store import (KVEntry, KVStoreConfig, Span,
+                                         StoreStats, TieredKVStore)
+from repro.serving.kvstore.transfer import Channel, Transfer, TransferEngine
+
+__all__ = [
+    "Channel", "KVEntry", "KVStoreConfig", "Span", "StoreStats",
+    "TieredKVStore", "Transfer", "TransferEngine",
+]

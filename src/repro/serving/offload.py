@@ -1,19 +1,28 @@
-"""Host-DRAM / SSD KV offload tiers (LMCache-style), as a cost model +
-capacity-tracked store.
+"""Host-DRAM / SSD KV offload — compatibility shim over the tiered store.
 
-When a request's KV is evicted from HBM and offloading is enabled, its
-prefix moves to DRAM (LRU-evicting older entries to SSD, then dropping).
-The program's next turn then *reloads* instead of recomputing. Offload
-writes are asynchronous (LMCache-style non-blocking), so only reload time
-enters the critical path — matching the paper's InferCept+LMCache setup.
+Historically this module *was* the offload tier: a capacity-tracked
+two-tier accounting model keyed by whole programs. The real
+implementation now lives in :mod:`repro.serving.kvstore`
+(:class:`TieredKVStore` + :class:`TransferEngine`): block-granular
+residency, async demotion writes, and queue-aware reload pricing.
+:class:`OffloadManager` survives as a thin shim that preserves the old
+call surface (``offload``/``lookup``/``reload_seconds``/``drop``/
+``_demote_lru``, byte-valued ``dram_used``/``ssd_used``) while
+delegating everything to the store — existing schedulers, benchmarks
+and tests keep working, and gain the corrected physics:
+
+- an SSD entry reloads in two *serial* hops (SSD→DRAM at ``ssd_bw``,
+  then DRAM→HBM at ``h2d_bw``), not one hop at ``min(ssd_bw, h2d_bw)``;
+- ``reload_seconds`` LRU-touches the entry like ``lookup`` does;
+- reloads queue behind in-flight transfers (pass ``now``; omitting it
+  prices against whatever is already on the channels at t=0).
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import OrderedDict
-from typing import Literal, Optional
+from typing import Optional
 
-Tier = Literal["dram", "ssd"]
+from repro.serving.kvstore import KVEntry, KVStoreConfig, TieredKVStore
 
 
 @dataclasses.dataclass
@@ -23,72 +32,64 @@ class OffloadConfig:
     h2d_bw: float = 25e9                 # host->device link, bytes/s
     ssd_bw: float = 3e9                  # SSD read, bytes/s
     enabled: bool = True
+    d2h_bw: float = 0.0                  # 0 = symmetric with h2d_bw
+    ssd_write_bw: float = 0.0            # 0 = half of ssd_bw
+    link_latency_s: float = 0.0
+    block_bytes: float = 1.0             # store accounting granularity
 
-
-@dataclasses.dataclass
-class _Entry:
-    program_id: str
-    nbytes: float
-    tokens: int
-    tier: Tier
+    def store_config(self) -> KVStoreConfig:
+        return KVStoreConfig(
+            dram_bytes=self.dram_bytes, ssd_bytes=self.ssd_bytes,
+            h2d_bw=self.h2d_bw, d2h_bw=self.d2h_bw or self.h2d_bw,
+            ssd_read_bw=self.ssd_bw,
+            ssd_write_bw=self.ssd_write_bw or self.ssd_bw / 2,
+            link_latency_s=self.link_latency_s,
+            block_bytes=self.block_bytes, enabled=self.enabled)
 
 
 class OffloadManager:
-    """Capacity-tracked two-tier store keyed by program_id."""
+    """Legacy facade: capacity-tracked tier store keyed by program_id."""
 
     def __init__(self, cfg: OffloadConfig):
         self.cfg = cfg
-        self.entries: OrderedDict[str, _Entry] = OrderedDict()
-        self.dram_used = 0.0
-        self.ssd_used = 0.0
+        self.store = TieredKVStore(cfg.store_config())
 
-    def offload(self, program_id: str, tokens: int, nbytes: float) -> None:
-        if not self.cfg.enabled or nbytes <= 0:
-            return
-        self.drop(program_id)
-        while self.dram_used + nbytes > self.cfg.dram_bytes and self._demote_lru():
-            pass
-        if self.dram_used + nbytes <= self.cfg.dram_bytes:
-            self.entries[program_id] = _Entry(program_id, nbytes, tokens, "dram")
-            self.dram_used += nbytes
-            return
-        if self.cfg.ssd_bytes and self.ssd_used + nbytes <= self.cfg.ssd_bytes:
-            self.entries[program_id] = _Entry(program_id, nbytes, tokens, "ssd")
-            self.ssd_used += nbytes
+    # ------------------------------------------------------ legacy surface
+    @property
+    def entries(self):
+        return self.store.entries
 
-    def _demote_lru(self) -> bool:
+    @property
+    def dram_used(self) -> float:
+        return self.store.dram_used
+
+    @property
+    def ssd_used(self) -> float:
+        return self.store.ssd_used
+
+    def offload(self, program_id: str, tokens: int, nbytes: float,
+                now: float = 0.0) -> Optional[KVEntry]:
+        """Admit into the tier store; returns the entry, or None if it
+        was dropped (fit nowhere) — i.e. whether demotion succeeded."""
+        return self.store.put(program_id, tokens, nbytes, now=now)
+
+    def _demote_lru(self, now: float = 0.0) -> bool:
         """Move the least-recently-used DRAM entry to SSD (or drop it)."""
-        for pid, e in self.entries.items():
-            if e.tier == "dram":
-                self.dram_used -= e.nbytes
-                if self.cfg.ssd_bytes and self.ssd_used + e.nbytes <= self.cfg.ssd_bytes:
-                    e.tier = "ssd"
-                    self.ssd_used += e.nbytes
-                else:
-                    del self.entries[pid]
-                return True
-        return False
+        return self.store._demote_lru(now)
 
-    def lookup(self, program_id: str) -> Optional[_Entry]:
-        e = self.entries.get(program_id)
-        if e is not None:
-            self.entries.move_to_end(program_id)   # LRU touch
-        return e
+    def lookup(self, program_id: str, now: float = 0.0) -> Optional[KVEntry]:
+        return self.store.get(program_id, now)
 
-    def reload_seconds(self, program_id: str) -> Optional[float]:
-        """Time to bring the program's KV back to HBM; None if absent."""
-        e = self.entries.get(program_id)
-        if e is None:
-            return None
-        bw = self.cfg.h2d_bw if e.tier == "dram" else min(self.cfg.ssd_bw,
-                                                          self.cfg.h2d_bw)
-        return e.nbytes / bw
+    def reload_seconds(self, program_id: str,
+                       now: float = 0.0) -> Optional[float]:
+        """Time to bring the program's KV back to HBM; None if absent.
+        Two serial hops for the SSD portion, queue- and readiness-aware."""
+        return self.store.reload_seconds(program_id, now)
+
+    def begin_reload(self, program_id: str,
+                     now: float = 0.0) -> Optional[float]:
+        """Commit the reload transfers and consume the entry."""
+        return self.store.begin_reload(program_id, now)
 
     def drop(self, program_id: str) -> None:
-        e = self.entries.pop(program_id, None)
-        if e is None:
-            return
-        if e.tier == "dram":
-            self.dram_used -= e.nbytes
-        else:
-            self.ssd_used -= e.nbytes
+        self.store.drop(program_id)

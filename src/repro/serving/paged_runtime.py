@@ -5,7 +5,17 @@ This is the layer where Continuum's mechanism is visible at the memory
 system level: a program's KV lives in scattered physical pages; *pinning*
 keeps the pages allocated and the block table alive across the tool-call
 gap, so the next turn decodes against the same physical pages (zero
-recompute, zero copy); *eviction* returns the pages to the free list.
+recompute, zero copy); *eviction* derefs the pages back toward the free
+list.
+
+Pages are *refcounted*: a radix-index prefix hit maps a new program's
+block table onto the same physical page ids another program already
+filled (``adopt_prefix``), and the first divergent write to a shared
+page triggers a copy-on-write split through the ``page_copy`` Pallas
+kernel — the prefix is shared in HBM for real, not just in accounting.
+``stage_out``/``restore`` batch-gather scattered pages into contiguous
+staging buffers (one bulk DMA) for tier moves through the
+:mod:`repro.serving.kvstore` store.
 
 Works for the uniform-attention families (dense/moe/audio/vlm). The
 engine-level BlockManager does the accounting; this runtime holds the
@@ -23,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels.decode_attention import paged_decode_attention
+from repro.kernels.page_copy import copy_pages, gather_pages, scatter_pages
 from repro.models import attention as attn_mod
 from repro.models.common import cast_params, rms_norm, take_layer
 from repro.models.mlp import mlp_apply
@@ -51,27 +62,176 @@ class PagedKVRuntime:
         self.k_pages = jnp.zeros((L, n_pages, page_size, KV, Dh), dt)
         self.v_pages = jnp.zeros((L, n_pages, page_size, KV, Dh), dt)
         self.free: list[int] = list(range(n_pages))
+        self.refs: dict[int, int] = {}             # page id -> holders
         self.programs: dict[str, ProgramEntry] = {}
         self._last: dict[str, jax.Array] = {}      # last token per program
+        self.cow_splits = 0
 
     # ------------------------------------------------------------- alloc
+    def _alloc_page(self) -> int:
+        if not self.free:
+            raise MemoryError("out of KV pages")
+        pi = self.free.pop()
+        self.refs[pi] = 1
+        return pi
+
+    def _deref(self, pi: int) -> None:
+        self.refs[pi] -= 1
+        assert self.refs[pi] >= 0, (pi, self.refs[pi])
+        if self.refs[pi] == 0:
+            del self.refs[pi]
+            self.free.append(pi)
+
     def _ensure_capacity(self, e: ProgramEntry, new_len: int) -> None:
         need = math.ceil(new_len / self.page_size)
         while len(e.pages) < need:
-            if not self.free:
-                raise MemoryError("out of KV pages")
-            e.pages.append(self.free.pop())
+            e.pages.append(self._alloc_page())
 
-    def evict(self, program_id: str) -> None:
-        e = self.programs.pop(program_id, None)
-        if e:
-            self.free.extend(e.pages)
+    def _writable_page(self, e: ProgramEntry, idx: int) -> int:
+        """The physical page for e's logical block `idx`, made exclusive:
+        a shared page (refs > 1) is COW-split through the page_copy
+        kernel before the first write lands on it."""
+        pi = e.pages[idx]
+        if self.refs.get(pi, 1) == 1:
+            return pi
+        new = self._alloc_page()
+        src = jnp.asarray([pi], jnp.int32)
+        dst = jnp.asarray([new], jnp.int32)
+        self.k_pages = copy_pages(self.k_pages, src, dst,
+                                  interpret=self.interpret)
+        self.v_pages = copy_pages(self.v_pages, src, dst,
+                                  interpret=self.interpret)
+        self.refs[pi] -= 1
+        e.pages[idx] = new
+        self.cow_splits += 1
+        return new
+
+    def evict(self, program_id: str, force: bool = False) -> bool:
+        """Deref the program's pages. A *pinned* program (TTL retention in
+        flight) refuses eviction unless ``force=True`` — returning False
+        instead of silently freeing pages the next turn depends on."""
+        e = self.programs.get(program_id)
+        if e is None:
+            return True
+        if e.pinned and not force:
+            return False
+        del self.programs[program_id]
+        for pi in e.pages:
+            self._deref(pi)
+        self._last.pop(program_id, None)
+        return True
 
     def pin(self, program_id: str) -> None:
         self.programs[program_id].pinned = True
 
+    def unpin(self, program_id: str) -> None:
+        self.programs[program_id].pinned = False
+
     def pages_of(self, program_id: str) -> list[int]:
         return list(self.programs[program_id].pages)
+
+    def page_ref(self, pi: int) -> int:
+        return self.refs.get(pi, 0)
+
+    # ----------------------------------------------- physical prefix sharing
+    def attach_index(self, index) -> None:
+        """Wire a :class:`~repro.serving.prefix.RadixPrefixIndex` to this
+        runtime: LRU eviction of a page-stamped node derefs its physical
+        pages here (freeing them once no program references them)."""
+        def _on_evict(node):
+            for pi in (node.page_ids or []):
+                self._deref(pi)
+        index.on_evict_node = _on_evict
+
+    def adopt_prefix(self, index, program_id: str,
+                     hashes: tuple[int, ...], now: float = 0.0,
+                     max_tokens: Optional[int] = None) -> int:
+        """Radix hit → shared physical pages: match `hashes` against the
+        page-stamped index and create `program_id`'s entry referencing
+        the SAME page ids (refcount bump, zero copy). Returns the shared
+        token count (0 = miss). The first divergent write COW-splits.
+
+        ``max_tokens`` caps the adopted length below the block boundary
+        (the scheduler charges at most ``prompt_len - 1`` cached tokens,
+        so the last prompt token is recomputed *into the shared page* —
+        the append that exercises the COW split)."""
+        blocks, node = index.acquire(hashes, now)
+        if node is None:
+            return 0
+        ids = index.path_page_ids(node)
+        index.release(node)      # physical safety lives in self.refs now
+        if ids is None or len(ids) < blocks:
+            return 0
+        tokens = blocks * self.page_size
+        if max_tokens is not None and max_tokens < tokens:
+            tokens = max_tokens
+        blocks = math.ceil(tokens / self.page_size)
+        if blocks == 0:
+            return 0
+        ids = ids[:blocks]
+        for pi in ids:
+            self.refs[pi] += 1
+        self.programs[program_id] = ProgramEntry(list(ids), tokens)
+        return tokens
+
+    def publish_prefix(self, index, program_id: str,
+                       hashes: tuple[int, ...], now: float = 0.0) -> int:
+        """Publish this program's full pages into a page-stamped radix
+        index. Newly inserted blocks hand the tree its own reference;
+        blocks already present dedup: the program's duplicate pages are
+        swapped for the tree's canonical ones and its copies deref'd.
+        Returns the number of deduplicated pages."""
+        e = self.programs[program_id]
+        full = min(len(hashes), e.length // self.page_size)
+        if full == 0:
+            return 0
+        hs = tuple(hashes[:full])
+        new, dup, node = index.insert(hs, None, 0, now,
+                                      page_ids=e.pages[:full])
+        if node is None:
+            return 0
+        if new:                  # the tree holds a ref on every new page
+            for pi in e.pages[full - new:full]:
+                self.refs[pi] += 1
+        canonical = index.path_page_ids(node)
+        index.release(node)      # tree retention is LRU, not a lock
+        if canonical is None:    # mixed page-stamped/accounting-only path
+            return 0
+        deduped = 0
+        shared = full - new      # leading blocks already in the tree
+        for i in range(shared):
+            mine, theirs = e.pages[i], canonical[i]
+            if mine != theirs:
+                self.refs[theirs] += 1
+                self._deref(mine)
+                e.pages[i] = theirs
+                deduped += 1
+        return deduped
+
+    # ------------------------------------------------------- tier staging
+    def stage_out(self, program_id: str) -> tuple[jax.Array, jax.Array, int]:
+        """Batch-gather the program's scattered pages into contiguous
+        (L, n, page, KV, Dh) staging buffers — the unit a tier move DMAs
+        to host DRAM in one transfer."""
+        e = self.programs[program_id]
+        ids = jnp.asarray(e.pages, jnp.int32)
+        return (gather_pages(self.k_pages, ids, interpret=self.interpret),
+                gather_pages(self.v_pages, ids, interpret=self.interpret),
+                e.length)
+
+    def restore(self, program_id: str, k_staging, v_staging,
+                length: int) -> list[int]:
+        """Scatter reloaded contiguous staging buffers into freshly
+        allocated physical pages (the H2D leg of a promotion)."""
+        n = k_staging.shape[1]
+        pages = [self._alloc_page() for _ in range(n)]
+        ids = jnp.asarray(pages, jnp.int32)
+        self.k_pages = scatter_pages(self.k_pages, k_staging, ids,
+                                     interpret=self.interpret)
+        self.v_pages = scatter_pages(self.v_pages, v_staging, ids,
+                                     interpret=self.interpret)
+        self.programs[program_id] = ProgramEntry(pages, length)
+        return pages
 
     # ----------------------------------------------------------- prefill
     def prefill(self, params, program_id: str, tokens: jax.Array) -> None:
@@ -99,14 +259,16 @@ class PagedKVRuntime:
         ps = self.page_size
         k = cache["k"][:, 0]                       # (L, cap, KV, Dh)
         v = cache["v"][:, 0]
-        for pos in range(start, start + count, ps):
-            n = min(ps, start + count - pos)
-            pi = e.pages[pos // ps]
-            off = pos % ps                         # 0 by construction
+        pos = start
+        while pos < start + count:
+            off = pos % ps                 # mid-page when adoption was capped
+            n = min(ps - off, start + count - pos)
+            pi = self._writable_page(e, pos // ps)  # COW-split if shared
             kblk = k[:, pos:pos + n].astype(self.k_pages.dtype)
             vblk = v[:, pos:pos + n].astype(self.v_pages.dtype)
             self.k_pages = self.k_pages.at[:, pi, off:off + n].set(kblk)
             self.v_pages = self.v_pages.at[:, pi, off:off + n].set(vblk)
+            pos += n
 
     def _gather_into(self, cache, e: ProgramEntry):
         ps = self.page_size
@@ -127,6 +289,10 @@ class PagedKVRuntime:
         cfg = self.cfg
         e = self.programs[program_id]
         self._ensure_capacity(e, e.length + 1)
+        # the append page must be exclusive BEFORE the block table is
+        # built: a COW split mid-loop would leave the table pointing at
+        # the stale shared page
+        self._writable_page(e, e.length // self.page_size)
         tables = jnp.asarray(e.pages, jnp.int32)[None]           # (1, n)
         # last generated token id is tracked by the caller; here we take the
         # model's own greedy continuation from the current state:
@@ -142,7 +308,7 @@ class PagedKVRuntime:
             p = take_layer(cparams["blocks"], layer)
             h = rms_norm(x, p["ln1"], cfg.norm_eps)
             q, k, v = attn_mod.qkv_project(p["attn"], h, cfg, pos[None])
-            # append this token's k/v into the page
+            # append this token's k/v into the page (made exclusive above)
             pi = e.pages[e.length // self.page_size]
             off = e.length % self.page_size
             self.k_pages = self.k_pages.at[layer, pi, off].set(

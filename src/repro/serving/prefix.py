@@ -93,15 +93,22 @@ def request_block_hashes(req: "Request", block_size: int) -> tuple[int, ...]:
 
 
 class RadixNode:
-    __slots__ = ("edge", "children", "parent", "refs", "last_access")
+    __slots__ = ("edge", "children", "parent", "refs", "last_access",
+                 "page_ids")
 
     def __init__(self, edge: list[int], parent: Optional["RadixNode"],
-                 refs: int = 0, last_access: float = 0.0):
+                 refs: int = 0, last_access: float = 0.0,
+                 page_ids: Optional[list[int]] = None):
         self.edge = edge                          # block hashes on this edge
         self.children: dict[int, RadixNode] = {}  # first edge hash -> child
         self.parent = parent
         self.refs = refs
         self.last_access = last_access
+        # physical HBM page ids backing this edge (1:1 with `edge`), when
+        # the index is attached to a PagedKVRuntime — radix hits then map
+        # straight to shared physical pages (COW sharing); None when the
+        # index is accounting-only (scheduler-level use)
+        self.page_ids = page_ids
 
     @property
     def n_blocks(self) -> int:
@@ -120,11 +127,17 @@ class RadixPrefixIndex:
     """Per-engine radix tree over prompt block hashes, backed by the
     BlockManager's shared pool (1:1 with the engine's block pool)."""
 
-    def __init__(self, cfg: PrefixConfig, blocks: "BlockManager"):
+    def __init__(self, cfg: PrefixConfig,
+                 blocks: Optional["BlockManager"] = None):
         self.cfg = cfg
+        # None = accounting-free index (attached to a PagedKVRuntime whose
+        # refcounted physical pages are the ground truth instead)
         self.blocks = blocks
         self.root = RadixNode([], None, refs=1)   # sentinel, never evicted
         self.stats = PrefixStats()
+        # called with each node reclaimed by evict() — the physical-page
+        # owner (PagedKVRuntime) uses it to deref the node's page_ids
+        self.on_evict_node = None  # type: Optional[callable]
 
     # ------------------------------------------------------------- internals
     def _walk(self, hashes: tuple[int, ...], split: bool) -> tuple[RadixNode, int]:
@@ -155,6 +168,9 @@ class RadixPrefixIndex:
         `child` runs through both halves."""
         upper = RadixNode(child.edge[:j], child.parent, refs=child.refs,
                           last_access=child.last_access)
+        if child.page_ids is not None:            # split the physical map too
+            upper.page_ids = child.page_ids[:j]
+            child.page_ids = child.page_ids[j:]
         child.parent.children[child.edge[0]] = upper
         child.edge = child.edge[j:]
         child.parent = upper
@@ -201,7 +217,8 @@ class RadixPrefixIndex:
             node = node.parent
 
     def insert(self, hashes: tuple[int, ...], held: Optional[RadixNode],
-               held_blocks: int, now: float
+               held_blocks: int, now: float,
+               page_ids: Optional[list[int]] = None
                ) -> tuple[int, int, Optional[RadixNode]]:
         """Insert a finished prompt; the caller holds `held` (covering
         `held_blocks` blocks, 0 if none). Returns
@@ -213,12 +230,18 @@ class RadixPrefixIndex:
           caller's copies must be *freed*;
         - deepest replaces `held` as the caller's lock (the old lock is
           released here).
+
+        With `page_ids` (1:1 with `hashes`), the newly created leaf is
+        stamped with the physical pages backing its blocks — the caller
+        (a PagedKVRuntime bridge) owns the refcount bump for them.
         """
         node, j = self._walk(hashes, split=True)
         dup = max(0, j - held_blocks)
         new = 0
         if j < len(hashes):
-            leaf = RadixNode(list(hashes[j:]), node, last_access=now)
+            leaf = RadixNode(list(hashes[j:]), node, last_access=now,
+                             page_ids=list(page_ids[j:])
+                             if page_ids is not None else None)
             node.children[hashes[j]] = leaf
             node = leaf
             new = leaf.n_blocks
@@ -256,13 +279,28 @@ class RadixPrefixIndex:
             del parent.children[n.edge[0]]
             n.parent = None
             freed += n.n_blocks
-            self.blocks.shared_free(n.n_blocks)
+            if self.blocks is not None:
+                self.blocks.shared_free(n.n_blocks)
+            if self.on_evict_node is not None:     # deref physical pages
+                self.on_evict_node(n)
             if parent is not self.root and not parent.children \
                     and parent.refs == 0:
                 seq += 1
                 heapq.heappush(heap, (parent.last_access, seq, parent))
         self.stats.evicted_blocks += freed
         return freed
+
+    def path_page_ids(self, node: Optional[RadixNode]
+                      ) -> Optional[list[int]]:
+        """Physical HBM pages backing the root→`node` path, prefix order;
+        None unless every edge on the path is page-stamped."""
+        ids: list[int] = []
+        while node is not None and node.parent is not None:
+            if node.page_ids is None:
+                return None
+            ids = list(node.page_ids) + ids
+            node = node.parent
+        return ids
 
     # -------------------------------------------------------------- insight
     def n_nodes(self) -> int:

@@ -177,16 +177,26 @@ class CostModel:
 
 
 def make_prefill_reload_fn(cost: CostModel, coef: np.ndarray,
-                           offload_enabled: bool, h2d_bw: float):
+                           store=None, clock: Callable[[], float] | None = None):
     """PrefillReload(r) for the TTL model: time to reconstruct r's context,
-    min(recompute via the fitted quadratic, reload over the host link)."""
+    min(recompute via the fitted quadratic, reload over the host link).
+
+    With a :class:`~repro.serving.kvstore.TieredKVStore` attached, the
+    reload term is priced by its :class:`TransferEngine` against the
+    channels' *current in-flight state* (queue backlog, per-transfer
+    latency) at the engine's virtual clock — a busy H2D link makes
+    retention look better, which is exactly the paper's reload-vs-
+    recompute tradeoff responding to load. Without a store the TTL model
+    can only ever recompute."""
 
     def fn(req) -> float:
         tokens = req.prompt_len + req.generated
         recompute = CostModel.quadratic_prefill_seconds(coef, tokens)
-        if not offload_enabled:
+        if store is None or not store.cfg.enabled:
             return recompute
-        reload = cost.kv_bytes(tokens) / h2d_bw
+        now = clock() if clock is not None else 0.0
+        # hypothetical future reload of a DRAM-resident entry, queue-aware
+        reload = store.transfer.reload_eta(cost.kv_bytes(tokens), 0.0, now)
         return min(recompute, reload)
 
     return fn

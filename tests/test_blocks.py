@@ -1,9 +1,9 @@
-"""Block allocator invariants, incl. hypothesis state-machine-ish sweep."""
-import pytest
+"""Block allocator invariants, incl. a randomized op-sequence sweep.
 
-pytest.importorskip("hypothesis",
-                    reason="property tests need hypothesis (optional dep)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+The property test runs under hypothesis when installed and falls back to
+a seeded random sweep otherwise (same pattern as the `logical_to_spec`
+property test), so minimal-dependency checkouts still exercise it."""
+import random
 
 from repro.serving.blocks import BlockConfig, BlockManager
 
@@ -54,12 +54,10 @@ class TestBasics:
         assert not m.can_allocate(91)
 
 
-@settings(max_examples=60, deadline=None)
-@given(st.lists(st.tuples(st.sampled_from(["alloc", "free", "pin", "adopt",
-                                           "unpin", "extend"]),
-                          st.integers(0, 9), st.integers(1, 30)),
-                max_size=60))
-def test_never_leaks_or_goes_negative(ops):
+_OP_NAMES = ["alloc", "free", "pin", "adopt", "unpin", "extend"]
+
+
+def _run_ops(ops):
     m = make(total=200)
     for op, rid, n in ops:
         pid = f"p{rid}"
@@ -80,3 +78,24 @@ def test_never_leaks_or_goes_negative(ops):
         assert m.used == sum(m.alloc.values()) + sum(m.pinned.values())
         assert all(v >= 0 for v in m.alloc.values())
         assert all(v > 0 for v in m.pinned.values())
+
+
+def test_never_leaks_or_goes_negative_fuzz():
+    rng = random.Random(0)
+    for _ in range(200):
+        ops = [(rng.choice(_OP_NAMES), rng.randint(0, 9), rng.randint(1, 30))
+               for _ in range(rng.randint(0, 60))]
+        _run_ops(ops)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(st.tuples(st.sampled_from(_OP_NAMES),
+                              st.integers(0, 9), st.integers(1, 30)),
+                    max_size=60))
+    def test_never_leaks_or_goes_negative_hypothesis(ops):
+        _run_ops(ops)
+except ImportError:                     # optional dep; the fuzz above runs
+    pass

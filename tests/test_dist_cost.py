@@ -46,7 +46,7 @@ def test_ttl_ranking_stable_under_both_cost_sources(arch):
     decisions = {}
     for name, cost in zip(("analytic", "roofline"), _models(arch)):
         coef = cost.fit_prefill_quadratic(32768)
-        reload_fn = make_prefill_reload_fn(cost, coef, False, 25e9)
+        reload_fn = make_prefill_reload_fn(cost, coef)   # recompute-only
         ttl = TTLModel()
         # past the cold-start threshold with a bimodal tool profile
         for i in range(150):

@@ -1,12 +1,10 @@
-"""Hypothesis property tests: system invariants of the serving engine
-under randomized agent workloads and policies."""
-import dataclasses
+"""Property tests: system invariants of the serving engine under
+randomized agent workloads and policies.
 
-import pytest
-
-pytest.importorskip("hypothesis",
-                    reason="property tests need hypothesis (optional dep)")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+Cases are generated from a `random.Random` so the suite runs everywhere:
+under hypothesis (when installed) the seed is drawn/shrunk by the
+framework; otherwise a seeded sweep covers every policy × offload combo."""
+import random
 
 from repro.configs import get_config
 from repro.core.types import Turn, Program
@@ -15,38 +13,31 @@ from repro.serving.offload import OffloadConfig
 from repro.serving.profiler import HardwareProfile
 from repro.sim.runner import run_workload
 
+POLICIES = ("vllm", "autellix", "infercept", "continuum")
 
-def random_programs(draw):
-    n = draw(st.integers(3, 10))
+
+def random_programs(rng: random.Random):
+    n = rng.randint(3, 10)
     programs = []
     t = 0.0
     for i in range(n):
-        t += draw(st.floats(0.1, 30.0))
-        n_turns = draw(st.integers(1, 6))
+        t += rng.uniform(0.1, 30.0)
+        n_turns = rng.randint(1, 6)
         turns = []
         for k in range(n_turns):
             last = k == n_turns - 1
             turns.append(Turn(
-                new_tokens=draw(st.integers(16, 4000)),
-                output_tokens=draw(st.integers(8, 400)),
-                tool=None if last else draw(st.sampled_from(
-                    ["ls", "grep", "pytest", "web"])),
-                tool_duration=0.0 if last else draw(st.floats(0.01, 60.0)),
+                new_tokens=rng.randint(16, 4000),
+                output_tokens=rng.randint(8, 400),
+                tool=None if last else rng.choice(
+                    ["ls", "grep", "pytest", "web"]),
+                tool_duration=0.0 if last else rng.uniform(0.01, 60.0),
             ))
         programs.append(Program(f"p{i}", t, turns))
     return programs
 
 
-@st.composite
-def workloads(draw):
-    return random_programs(draw)
-
-
-@settings(max_examples=15, deadline=None)
-@given(workloads(),
-       st.sampled_from(["vllm", "autellix", "infercept", "continuum"]),
-       st.booleans())
-def test_engine_invariants(programs, policy, offload):
+def _check_engine_invariants(programs, policy: str, offload: bool) -> None:
     cfg = get_config("qwen2-1.5b")
     off = OffloadConfig(dram_bytes=50e9) if offload else None
     eng = Engine(cfg, EngineConfig(policy=policy, chips=4, offload=off,
@@ -65,6 +56,10 @@ def test_engine_invariants(programs, policy, offload):
     assert 0 <= eng.blocks.used <= eng.blocks.total
     assert eng.blocks.peak_used <= eng.blocks.total
 
+    # 2b. tiered-store accounting survives the whole run
+    if eng.kvstore is not None:
+        eng.kvstore.check()
+
     # 3. scheduler drained
     assert not eng.running and not eng.scheduler.waiting
 
@@ -81,3 +76,24 @@ def test_engine_invariants(programs, policy, offload):
         expect = sum(t.output_tokens for pr in programs for t in pr.turns)
         assert eng.tokens_decoded >= expect
     assert s.makespan > 0
+
+
+def test_engine_invariants_fuzz():
+    for seed in range(8):
+        rng = random.Random(seed)
+        _check_engine_invariants(random_programs(rng),
+                                 POLICIES[seed % len(POLICIES)],
+                                 offload=bool(seed % 2))
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**63 - 1),
+           st.sampled_from(POLICIES), st.booleans())
+    def test_engine_invariants_hypothesis(seed, policy, offload):
+        _check_engine_invariants(random_programs(random.Random(seed)),
+                                 policy, offload)
+except ImportError:                     # optional dep; the fuzz above runs
+    pass

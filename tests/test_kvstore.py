@@ -1,0 +1,288 @@
+"""Tiered KV store: transfer-timeline pricing, tier residency, and the
+cross-tier accounting invariant under randomized op sequences (mirroring
+``BlockManager.check()``), plus physical page-refcount conservation under
+allocate/adopt/COW-split/evict cycles in the paged runtime."""
+import random
+from collections import Counter
+
+import pytest
+
+from repro.serving.kvstore import (KVStoreConfig, TieredKVStore,
+                                   TransferEngine)
+
+
+def make_store(dram=100.0, ssd=0.0, h2d=10.0, d2h=10.0, ssd_read=2.0,
+               ssd_write=1.0, latency=0.0, block=1.0):
+    cfg = KVStoreConfig(dram_bytes=dram, ssd_bytes=ssd, h2d_bw=h2d,
+                        d2h_bw=d2h, ssd_read_bw=ssd_read,
+                        ssd_write_bw=ssd_write, link_latency_s=latency,
+                        block_bytes=block)
+    return TieredKVStore(cfg)
+
+
+DRAINED = 1e6          # a `now` far past every in-flight write
+
+
+class TestTransferEngine:
+    def test_transfers_queue_serially_per_channel(self):
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        t1 = eng.h2d.submit(40.0, now=0.0)
+        t2 = eng.h2d.submit(20.0, now=0.0)
+        assert (t1.start, t1.end) == (0.0, 4.0)
+        assert (t2.start, t2.end) == (4.0, 6.0)      # queued behind t1
+
+    def test_channels_are_full_duplex(self):
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        eng.write_dram(100.0, now=0.0)               # d2h busy until t=10
+        t = eng.h2d.submit(10.0, now=0.0)
+        assert t.end == 1.0                          # h2d unaffected
+
+    def test_latency_is_per_transfer(self):
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0, latency=0.5)
+        assert eng.h2d.submit(10.0, now=0.0).end == pytest.approx(1.5)
+
+    def test_ssd_reload_is_two_serial_hops(self):
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        # SSD->DRAM at 2.0 then DRAM->HBM at 10.0, serial
+        assert eng.reload_eta(0.0, 20.0, now=0.0) == \
+            pytest.approx(20.0 / 2.0 + 20.0 / 10.0)
+
+    def test_peek_equals_commit(self):
+        a = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        b = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        for eng in (a, b):
+            eng.h2d.submit(30.0, now=0.0)            # pre-existing backlog
+        peek = a.reload_eta(40.0, 20.0, now=1.0)
+        commit = b.reload_eta(40.0, 20.0, now=1.0, commit=True)
+        assert peek == pytest.approx(commit)
+
+    def test_peek_does_not_mutate_state(self):
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        before = eng.h2d.busy_until
+        eng.reload_eta(50.0, 50.0, now=0.0)
+        assert eng.h2d.busy_until == before
+        assert eng.ssd_read.busy_until == 0.0
+
+    def test_readiness_gates_reload(self):
+        """A reload can't start before the in-flight demotion write lands."""
+        eng = TransferEngine(10.0, 10.0, 2.0, 1.0)
+        assert eng.reload_eta(10.0, 0.0, now=0.0, dram_ready=5.0) == \
+            pytest.approx(5.0 + 1.0)
+
+
+class TestTieredStore:
+    def test_put_then_pressure_demotes_lru_to_ssd(self):
+        s = make_store(dram=100.0, ssd=1000.0)
+        s.put("old", 10, 60.0)
+        s.put("new", 10, 60.0)                       # demotes "old"
+        assert s.entries["old"].tier == "ssd"
+        assert s.entries["new"].tier == "dram"
+        s.check()
+
+    def test_put_drops_when_no_tier_fits(self):
+        s = make_store(dram=50.0, ssd=0.0)
+        assert s.put("big", 10, 80.0) is None
+        assert s.stats.drops == 1
+        s.check()
+
+    def test_pin_protects_from_pressure_demotion(self):
+        s = make_store(dram=100.0, ssd=1000.0)
+        s.put("keep", 10, 60.0)
+        s.pin("keep")
+        s.put("next", 10, 60.0)                      # can't demote "keep"
+        assert s.entries["keep"].tier == "dram"
+        assert "next" in s.entries                   # landed on SSD instead
+        assert s.entries["next"].tier == "ssd"
+        s.check()
+
+    def test_partial_demote_and_promote_roundtrip(self):
+        s = make_store(dram=100.0, ssd=1000.0, block=10.0)
+        s.put("p", 10, 80.0)                         # 8 blocks in DRAM
+        assert s.demote("p", blocks=3, now=DRAINED) == 3
+        assert s.entries["p"].tier == "mixed"
+        assert (s.entries["p"].dram_blocks, s.entries["p"].ssd_blocks) == \
+            (5, 3)
+        s.check()
+        assert s.promote("p", now=DRAINED) == 3
+        assert s.entries["p"].tier == "dram"
+        s.check()
+
+    def test_begin_reload_consumes_and_matches_peek(self):
+        s = make_store(dram=100.0, ssd=1000.0)
+        s.put("p", 10, 60.0)
+        peek = s.reload_seconds("p", now=DRAINED)
+        got = s.begin_reload("p", now=DRAINED)
+        assert got == pytest.approx(peek)
+        assert "p" not in s.entries and s.stats.reloads == 1
+        s.check()
+
+    def test_usage_reports_all_tiers_and_channels(self):
+        s = make_store(dram=100.0, ssd=500.0)
+        s.put("p", 10, 60.0)
+        u = s.usage()
+        assert u["dram"]["used_blocks"] == 60
+        assert set(u["transfer"]) == {"h2d", "d2h", "ssd_read", "ssd_write"}
+
+
+# ---------------------------------------------------------------------------
+# Satellite: cross-tier accounting invariant under randomized op sequences.
+# Runs under hypothesis when installed; the seeded sweep below always runs.
+# ---------------------------------------------------------------------------
+_OPS = ("put", "get", "demote", "promote", "pin", "unpin", "drop",
+        "reload", "pressure")
+
+
+def _run_store_ops(seed: int, n_ops: int = 120) -> None:
+    rng = random.Random(seed)
+    s = make_store(dram=rng.choice([40.0, 100.0]),
+                   ssd=rng.choice([0.0, 80.0, 300.0]),
+                   block=rng.choice([1.0, 8.0]))
+    now = 0.0
+    for _ in range(n_ops):
+        now += rng.random()
+        pid = f"p{rng.randint(0, 5)}"
+        op = rng.choice(_OPS)
+        if op == "put":
+            s.put(pid, rng.randint(1, 50), rng.uniform(1.0, 90.0), now=now)
+        elif op == "get":
+            s.get(pid, now)
+        elif op == "demote":
+            s.demote(pid, blocks=rng.choice([None, rng.randint(1, 40)]),
+                     now=now)
+        elif op == "promote":
+            s.promote(pid, blocks=rng.choice([None, rng.randint(1, 40)]),
+                      now=now)
+        elif op == "pin":
+            s.pin(pid)
+        elif op == "unpin":
+            s.unpin(pid)
+        elif op == "drop":
+            s.drop(pid)
+        elif op == "reload":
+            s.begin_reload(pid, now)
+        elif op == "pressure":
+            s._demote_lru(now)
+        s.check()                      # the cross-tier invariant, every op
+    # terminal: dropping everything returns both tiers to empty
+    for pid in list(s.entries):
+        s.drop(pid)
+    s.check()
+    assert s.dram_used_blocks == 0 and s.ssd_used_blocks == 0
+
+
+def test_tier_accounting_invariant_fuzz():
+    for seed in range(40):
+        _run_store_ops(seed)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @given(st.integers(min_value=0, max_value=2**63 - 1))
+    @settings(max_examples=150, deadline=None)
+    def test_tier_accounting_invariant_hypothesis(seed):
+        _run_store_ops(seed)
+except ImportError:                    # optional dep; the fuzz above runs
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Physical page refcounts: conservation under allocate / publish / adopt /
+# COW-split / evict / tree-LRU cycles in the paged runtime.
+# ---------------------------------------------------------------------------
+def _check_page_refs(rt, idx) -> None:
+    # free list and refcounted pages partition the pool
+    assert len(rt.free) + len(rt.refs) == rt.n_pages
+    assert set(rt.free).isdisjoint(rt.refs)
+    expected = Counter()
+    for e in rt.programs.values():
+        expected.update(e.pages)
+    stack = [idx.root]
+    while stack:
+        n = stack.pop()
+        stack.extend(n.children.values())
+        if n.page_ids:
+            expected.update(n.page_ids)
+    assert dict(expected) == rt.refs, (dict(expected), rt.refs)
+
+
+def test_page_refcount_conservation_fuzz():
+    from repro.configs import get_config
+    from repro.serving.paged_runtime import PagedKVRuntime, ProgramEntry
+    from repro.serving.prefix import PrefixConfig, RadixPrefixIndex
+
+    cfg = get_config("glm4-9b", smoke=True)
+    rng = random.Random(1)
+    for _ in range(3):
+        rt = PagedKVRuntime(cfg, n_pages=16, page_size=8)
+        idx = RadixPrefixIndex(PrefixConfig())
+        rt.attach_index(idx)
+        hashes_of: dict[str, tuple] = {}
+        for step in range(60):
+            pid = f"p{rng.randint(0, 4)}"
+            op = rng.choice(("new", "publish", "adopt", "cow", "evict",
+                             "tree_evict", "pin", "unpin"))
+            e = rt.programs.get(pid)
+            if op == "new" and e is None:
+                k = rng.randint(1, 3)
+                if len(rt.free) >= k:
+                    rt.programs[pid] = ProgramEntry(
+                        [rt._alloc_page() for _ in range(k)],
+                        k * rt.page_size)
+                    # small hash alphabet: adopt/publish paths collide
+                    hashes_of[pid] = tuple(rng.randint(1, 4)
+                                           for _ in range(k))
+            elif op == "publish" and e is not None and pid in hashes_of:
+                rt.publish_prefix(idx, pid, hashes_of[pid])
+            elif op == "adopt" and e is None:
+                hs = tuple(rng.randint(1, 4)
+                           for _ in range(rng.randint(1, 3)))
+                if len(rt.free) >= 1:    # COW headroom for later writes
+                    got = rt.adopt_prefix(
+                        idx, pid, hs,
+                        max_tokens=rng.choice([None, 1 + rng.randint(
+                            0, len(hs) * rt.page_size - 1)]))
+                    if got:
+                        hashes_of[pid] = hs
+            elif op == "cow" and e is not None and e.pages and rt.free:
+                rt._writable_page(e, rng.randrange(len(e.pages)))
+            elif op == "evict" and e is not None:
+                rt.evict(pid, force=rng.random() < 0.5)
+                if pid not in rt.programs:
+                    hashes_of.pop(pid, None)
+            elif op == "tree_evict":
+                idx.evict(rng.randint(1, 4))
+            elif op == "pin" and e is not None:
+                rt.pin(pid)
+            elif op == "unpin" and e is not None:
+                rt.unpin(pid)
+            _check_page_refs(rt, idx)
+        # terminal: force-evict all programs + drain the tree -> all free
+        for pid in list(rt.programs):
+            rt.evict(pid, force=True)
+        idx.evict(10 ** 6)
+        _check_page_refs(rt, idx)
+        assert sorted(rt.free) == list(range(rt.n_pages))
+
+
+class TestDropSemantics:
+    def test_replacement_is_not_an_eviction(self):
+        s = make_store(dram=100.0)
+        s.put("p", 10, 40.0)
+        s.put("p", 12, 50.0)                         # re-offload, same prog
+        assert s.stats.drops == 0 and s.stats.dropped_blocks == 0
+        s.check()
+
+    def test_on_drop_fires_for_pressure_victims_only(self):
+        dropped = []
+        s = make_store(dram=100.0, ssd=0.0)
+        s.on_drop = dropped.append
+        s.put("victim", 10, 60.0)
+        s.put("victim", 10, 60.0)                    # replacement: no event
+        s.put("next", 10, 60.0)                      # LRU-drops "victim"
+        assert dropped == ["victim"]
+        s.begin_reload("next", now=DRAINED)          # consumption: no event
+        assert dropped == ["victim"]
+        s.put("x", 10, 60.0)
+        s.drop("x")                                  # explicit drop: event
+        assert dropped == ["victim", "x"]

@@ -65,9 +65,35 @@ class TestDemoteLRU:
         m = make_store(dram=100.0, ssd=1000.0)
         m.offload("slowpath", tokens=10, nbytes=60.0)
         m.offload("fastpath", tokens=10, nbytes=60.0)   # demotes slowpath
-        assert m.reload_seconds("fastpath") == pytest.approx(60.0 / 10.0)
-        assert m.reload_seconds("slowpath") == pytest.approx(60.0 / 2.0)
-        assert m.reload_seconds("missing") is None
+        # steady state (demotion writes drained): a DRAM entry pays one
+        # H2D hop; an SSD entry pays TWO serial hops (SSD→DRAM at ssd_bw,
+        # then DRAM→HBM at h2d_bw) — not one hop at min(ssd_bw, h2d_bw)
+        drained = 1e6
+        assert m.reload_seconds("fastpath", now=drained) == \
+            pytest.approx(60.0 / 10.0)
+        assert m.reload_seconds("slowpath", now=drained) == \
+            pytest.approx(60.0 / 2.0 + 60.0 / 10.0)
+        assert m.reload_seconds("missing", now=drained) is None
+
+    def test_reload_waits_for_inflight_demotion_write(self):
+        """Reload pricing comes from transfer state: an entry still being
+        written down (async D2H) is not reloadable before the write
+        lands, and the reload hop queues behind it."""
+        m = make_store(dram=100.0, ssd=0.0)
+        m.offload("p", tokens=10, nbytes=60.0)          # D2H ends at t=6
+        # at t=0 the write is in flight: wait 6s, then 6s back up
+        assert m.reload_seconds("p", now=0.0) == pytest.approx(12.0)
+        # once drained, only the H2D hop remains
+        assert m.reload_seconds("p", now=50.0) == pytest.approx(6.0)
+
+    def test_reload_seconds_lru_touches_like_lookup(self):
+        m = make_store(dram=100.0, ssd=1000.0)
+        m.offload("a", tokens=10, nbytes=40.0)
+        m.offload("b", tokens=10, nbytes=40.0)
+        m.reload_seconds("a", now=1e6)                  # a becomes MRU
+        m.offload("c", tokens=10, nbytes=40.0)          # demotes b, not a
+        assert m.entries["a"].tier == "dram"
+        assert m.entries["b"].tier == "ssd"
 
 
 class TestFinalTurnOffload:

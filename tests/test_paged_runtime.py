@@ -108,3 +108,105 @@ class TestPagedRuntime:
                                     cfg.vocab_size)
         with pytest.raises(MemoryError):
             rt.prefill(params, "p", tokens)
+
+
+class TestPinnedEvict:
+    """Regression: evict() must refuse a pinned program (the TTL mechanism
+    depends on pinned pages surviving) unless force=True."""
+
+    def test_evict_refuses_pinned(self, setup):
+        cfg, model, params = setup
+        from repro.serving.paged_runtime import ProgramEntry
+        rt = PagedKVRuntime(cfg, n_pages=8, page_size=8)
+        rt.programs["p"] = ProgramEntry([rt._alloc_page()], 8)
+        rt.pin("p")
+        assert rt.evict("p") is False          # refused: pages intact
+        assert "p" in rt.programs and len(rt.free) == 7
+        assert rt.evict("p", force=True) is True
+        assert "p" not in rt.programs and len(rt.free) == 8
+        assert rt.evict("p") is True           # absent: trivially evicted
+
+    def test_unpin_then_evict(self, setup):
+        cfg, model, params = setup
+        from repro.serving.paged_runtime import ProgramEntry
+        rt = PagedKVRuntime(cfg, n_pages=8, page_size=8)
+        rt.programs["p"] = ProgramEntry([rt._alloc_page()], 8)
+        rt.pin("p")
+        rt.unpin("p")
+        assert rt.evict("p") is True and len(rt.free) == 8
+
+
+class TestPhysicalPrefixSharing:
+    """Acceptance: two sequences sharing a radix prefix reference the SAME
+    physical HBM page ids, and a divergent append COW-splits — both then
+    decode bit-identically to uninterrupted runs."""
+
+    def test_radix_hit_shares_pages_and_cow_splits(self, setup):
+        from repro.serving.prefix import PrefixConfig, RadixPrefixIndex
+        cfg, model, params = setup
+        tokens = jax.random.randint(jax.random.PRNGKey(8), (16,), 0,
+                                    cfg.vocab_size)
+        ref = reference_decode(model, params, tokens, 2)
+
+        rt = PagedKVRuntime(cfg, n_pages=16, page_size=8)
+        idx = RadixPrefixIndex(PrefixConfig())
+        rt.attach_index(idx)
+        rt.prefill(params, "A", tokens)                  # 2 full pages
+        hashes = (101, 202)                              # per-block hashes
+        assert rt.publish_prefix(idx, "A", hashes) == 0  # fresh publish
+        pages_a = rt.pages_of("A")
+        # tree + A hold the pages now
+        assert all(rt.page_ref(p) == 2 for p in pages_a)
+
+        # B's prompt is identical; the scheduler charges prompt_len-1, so
+        # B adopts 15 tokens and recomputes the last one into the page
+        adopted = rt.adopt_prefix(idx, "B", hashes, max_tokens=15)
+        assert adopted == 15
+        assert rt.pages_of("B") == pages_a               # SAME physical ids
+        assert all(rt.page_ref(p) == 3 for p in pages_a)
+
+        # divergent append: B writes token 15 into the shared second page
+        rt.prefill(params, "B", tokens[15:16])
+        assert rt.cow_splits == 1
+        pages_b = rt.pages_of("B")
+        assert pages_b[0] == pages_a[0]                  # still shared
+        assert pages_b[1] != pages_a[1]                  # COW-split copy
+        assert rt.page_ref(pages_a[1]) == 2              # A + tree
+        assert rt.page_ref(pages_b[1]) == 1              # B exclusive
+
+        # both programs decode exactly like uninterrupted runs
+        cache = model.init_cache(1, 32)
+        logits, _ = model.forward(params, tokens=tokens.reshape(1, -1),
+                                  cache=cache, cache_len=0, mode="prefill",
+                                  logits_slice=1)
+        seed = int(jnp.argmax(logits[0, -1]))
+        rt.seed_token("A", seed)
+        rt.seed_token("B", seed)
+        for name in ("A", "B"):
+            for i in range(2):
+                out = rt.decode(params, name)
+                np.testing.assert_allclose(np.asarray(out), ref[i],
+                                           rtol=0.5, atol=0.12)
+                assert int(np.asarray(out).argmax()) == int(ref[i].argmax())
+
+    def test_evicted_sharer_releases_only_its_refs(self, setup):
+        from repro.serving.paged_runtime import ProgramEntry
+        from repro.serving.prefix import PrefixConfig, RadixPrefixIndex
+        cfg, model, params = setup
+        rt = PagedKVRuntime(cfg, n_pages=8, page_size=8)
+        idx = RadixPrefixIndex(PrefixConfig())
+        rt.attach_index(idx)
+        rt.programs["A"] = ProgramEntry([rt._alloc_page(), rt._alloc_page()],
+                                        16)
+        rt.publish_prefix(idx, "A", (1, 2))
+        rt.adopt_prefix(idx, "B", (1, 2))
+        pages = rt.pages_of("A")
+        rt.evict("B")
+        assert all(rt.page_ref(p) == 2 for p in pages)   # A + tree remain
+        rt.evict("A")
+        assert all(rt.page_ref(p) == 1 for p in pages)   # tree only
+        assert not rt.free or set(rt.free).isdisjoint(pages)
+        # LRU-evicting the tree node releases the physical pages too
+        idx.evict(2)
+        assert all(rt.page_ref(p) == 0 for p in pages)
+        assert set(pages) <= set(rt.free)
