@@ -28,6 +28,19 @@ from repro.serving.offload import OffloadManager
 from repro.serving.prefix import RadixPrefixIndex, request_block_hashes
 
 
+def materialized_tokens(req: Request) -> int:
+    """KV tokens a request's cache PHYSICALLY holds: the final sampled
+    token's KV is never appended (it is the next turn's first input), so
+    a request that generated g tokens materialized prompt + g - 1
+    positions; one still mid-prefill holds exactly its prefilled prefix.
+    Pins and tier entries credit exactly this — crediting prompt + g
+    would make every clean reload/adoption look one token short in the
+    physical path."""
+    if req.generated > 0:               # prefill done: prompt is resident
+        return req.prompt_len + req.generated - 1
+    return req.prefill_pos
+
+
 @dataclasses.dataclass
 class PinEntry:
     program_id: str
@@ -74,11 +87,22 @@ class Scheduler:
         self.on_evict: Optional[Callable[[str], None]] = None  # backend hook
         # tiered-store backend hooks: a demotion keeps the KV (host copy)
         # while an eviction genuinely loses it; a reload restores it
+        # (on_reload receives the usable cached-token count — a partial
+        # prefix truncates the physical restore)
         self.on_demote: Optional[Callable[[str], None]] = None
-        self.on_reload: Optional[Callable[[str], None]] = None
+        self.on_reload: Optional[Callable[[str, int], None]] = None
         # engine-wired estimator: prefill seconds for a token count (prices
         # the recompute a TTL/offload miss causes — bench/metrics signal)
         self.recompute_estimate_fn: Optional[Callable[[int], float]] = None
+        # decision log: when the engine points this at a list, every
+        # scheduling decision (admit source, pin, unpin, demote/evict,
+        # reload, preempt) is appended as a tuple — the differential
+        # replay harness compares these streams across backends
+        self.decision_sink: Optional[list] = None
+
+    def _log(self, kind: str, program_id: str, *info) -> None:
+        if self.decision_sink is not None:
+            self.decision_sink.append((kind, program_id) + info)
 
     # ----------------------------------------------------------- Algorithm 1
     def on_request_arrive(self, req: Request, now: float) -> None:
@@ -111,10 +135,12 @@ class Scheduler:
             n = self.blocks.pin(req.request_id, req.program_id)
             self.pinned[req.program_id] = PinEntry(
                 req.program_id, req.request_id, now + decision.ttl,
-                req.prompt_len + req.generated, now,
+                materialized_tokens(req), now,
                 prefix_node=req.prefix_node)   # pin inherits the radix lock
             req.prefix_node = None
             self.stats.pins += 1
+            self._log("pin", req.program_id, req.turn_idx,
+                      round(decision.ttl, 9))
             return {"pinned": True, "ttl": decision.ttl, "blocks": n}
         self._free_finished(req, now)
         return {"pinned": False, "ttl": 0.0}
@@ -123,27 +149,42 @@ class Scheduler:
                        final: bool = False) -> None:
         self.blocks.free_request(req.request_id)
         self._release_prefix(req)
-        demoted = False
-        if self.offload is not None:
-            if final:
-                # program finished: no future turn will ever reload this KV
-                self.offload.drop(req.program_id)
-            else:
-                tokens = req.prompt_len + req.generated
-                demoted = self.offload.offload(
-                    req.program_id, tokens,
-                    tokens * self._kv_bytes_per_token, now=now) is not None
-        self._notify_release(req.program_id, demoted)
+        if final and self.offload is not None:
+            # program finished: no future turn will ever reload this KV
+            self.offload.drop(req.program_id)
+        self.release_program(req.program_id,
+                             0 if final else materialized_tokens(req),
+                             now, reason="finish_final" if final
+                             else "finish")
 
-    def _notify_release(self, program_id: str, demoted: bool) -> None:
+    def release_program(self, program_id: str, tokens: int, now: float,
+                        reason: str) -> bool:
+        """THE release protocol (single copy — finish, TTL expiry,
+        deadlock victims and engine preemption all come through here):
+        offload-demote ``tokens`` of the program's HBM KV if a tier will
+        take them (``tokens=0`` = nothing reloadable, e.g. a final turn),
+        then notify the backend demote-vs-evict. Returns demoted."""
+        demoted = False
+        if self.offload is not None and tokens > 0:
+            demoted = self.offload.offload(
+                program_id, tokens, tokens * self._kv_bytes_per_token,
+                now=now) is not None
+        self._notify_release(program_id, demoted, reason=reason)
+        return demoted
+
+    def _notify_release(self, program_id: str, demoted: bool,
+                        reason: str = "") -> None:
         """Tell the execution backend what happened to the program's HBM
         KV: demoted (a lower tier holds it — keep a host copy) vs evicted
         (genuinely gone)."""
         if demoted:
             self.stats.demotions += 1
+            self._log("demote", program_id, reason)
             if self.on_demote is not None:
                 self.on_demote(program_id)
                 return
+        else:
+            self._log("evict", program_id, reason)
         if self.on_evict is not None:
             self.on_evict(program_id)
 
@@ -173,14 +214,14 @@ class Scheduler:
             # the shared path stays cached but is no longer pin-protected
             self.prefix_index.release(e.prefix_node)
             e.prefix_node = None
-        demoted = False
-        if self.offload is not None and n and reason != "program_done":
-            # TTL expiry demotes HBM→DRAM (async write on the transfer
-            # timeline) instead of dropping the context
-            demoted = self.offload.offload(
-                program_id, e.tokens,
-                e.tokens * self._kv_bytes_per_token, now=now) is not None
-        self._notify_release(program_id, demoted)
+        self._log("unpin", program_id, reason)
+        # TTL expiry demotes HBM→DRAM (async write on the transfer
+        # timeline) instead of dropping the context; a finished program
+        # (or an empty pin) has nothing reloadable
+        self.release_program(
+            program_id,
+            e.tokens if n and reason != "program_done" else 0,
+            now, reason=reason)
         return n
 
     # ------------------------------------------------------------ selection
@@ -304,8 +345,12 @@ class Scheduler:
             req.cached_prefix = cached
             self.stats.offload_reloads += 1
             self.stats.reload_seconds += req.reload_seconds
+            self._log("reload", req.program_id,
+                      round(req.reload_seconds, 9), cached)
             if self.on_reload is not None:
-                self.on_reload(req.program_id)
+                # the usable prefix (`cached`) truncates the physical
+                # restore — suffix blocks the store dropped are recomputed
+                self.on_reload(req.program_id, cached)
         else:
             # full recompute: clear any reload debt left from an earlier
             # offload admission of this (since preempted) request
@@ -317,6 +362,7 @@ class Scheduler:
                         self.recompute_estimate_fn(req.prompt_len)
         if need:
             self.blocks.allocate(req.request_id, need)
+        self._log("admit", req.program_id, req.turn_idx, source, cached)
         self.waiting.remove(req)
         req.state = RequestState.RUNNING
         if req.first_schedule_time < 0:

@@ -2,18 +2,34 @@
 
 - ``SimBackend`` (in engine.py): virtual clock, analytic cost model —
   cluster-scale studies.
-- ``JaxModelBackend`` (here): REAL model execution. Every prefill chunk and
-  decode token runs through ``Model.forward`` with a per-request KV cache;
-  step duration is measured wall time. On TPU this is the production path
-  (with the Pallas kernels); on CPU it demos end-to-end generation with
-  small models (examples/quickstart.py).
+- ``JaxModelBackend`` (here): REAL model execution over a
+  :class:`~repro.serving.paged_runtime.PagedKVRuntime`. Every prefill
+  chunk and decode token runs through the model with the program's KV in
+  refcounted physical pages; step duration is measured wall time. On TPU
+  this is the production path (with the Pallas kernels); on CPU it demos
+  end-to-end generation with small models (examples/quickstart.py).
 
 The scheduler/TTL logic is identical under both backends — that is the
 point: the paper's contribution is exercised unchanged.
+
+Physical staging (PR 4): the engine's demote/reload hooks land here as
+``offload_program``/``restore_program``. A demotion batch-gathers the
+program's scattered pages into contiguous staging buffers through the
+``page_copy`` Pallas kernel (``PagedKVRuntime.stage_out``) and moves
+them to host memory in ONE bulk copy; a reload scatters them back
+(``restore``). There are no ad-hoc per-request cache copies: TTL-expiry
+demotion, preemption demotion, and pressure eviction all take the same
+staging path, and COW prefix adoption maps admissions onto already-
+resident shared pages. Prompt token ids are drawn per (stream, absolute
+position) — programs sharing a preamble share the exact token ids, so
+radix prefix hits are physically bit-identical pages, not just
+accounting entries.
 """
 from __future__ import annotations
 
+import math
 import time
+import zlib
 from typing import Optional
 
 import jax
@@ -21,37 +37,114 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import Model
+from repro.kernels.page_copy import gather_pages
+from repro.serving.paged_runtime import PAGED_FAMILIES, PagedKVRuntime
+from repro.serving.prefix import (PrefixConfig, RadixPrefixIndex,
+                                  request_block_hashes)
 
 
 class JaxModelBackend:
-    """Real generation; per-request caches keyed by program (so a TTL hit
-    genuinely reuses the computed cache, and an eviction genuinely loses it).
-    """
+    """Real generation; per-program KV in a PagedKVRuntime's physical
+    pages (so a TTL hit genuinely reuses the computed cache, an eviction
+    genuinely loses it, and a demotion genuinely stages it out through
+    the page_copy kernel)."""
 
     def __init__(self, cfg: ModelConfig, params=None, rng=None,
-                 max_len: int = 4096):
+                 max_len: int = 4096, runtime: PagedKVRuntime | None = None,
+                 n_pages: Optional[int] = None, page_size: int = 16,
+                 interpret: bool = True):
+        if runtime is None:
+            if cfg.family not in PAGED_FAMILIES or \
+                    cfg.local_global_alternating:
+                raise ValueError(
+                    f"JaxModelBackend requires a uniform-attention family "
+                    f"(got {cfg.family}); use SimBackend for SSM/hybrid "
+                    f"archs")
+            runtime = PagedKVRuntime(
+                cfg, n_pages=n_pages or max(64, 2 * max_len // page_size),
+                page_size=page_size, interpret=interpret)
         self.cfg = cfg
-        self.model = Model(cfg)
+        self.runtime = runtime
+        self.model = runtime.model
         rng = rng if rng is not None else jax.random.PRNGKey(0)
         self.params = params if params is not None else self.model.init(rng)
         self.max_len = max_len
-        self.caches: dict[str, tuple] = {}      # program_id -> (cache, length)
-        self.tokens: dict[str, jax.Array] = {}  # program_id -> generated ids
-        self.host_caches: dict[str, tuple] = {}  # demoted to host DRAM
         self._rng = rng
-        self.prefill_tokens_computed = 0        # TTL savings show up here
+        self._streams: dict[str, jax.Array] = {}   # stream -> token ids
+        # staged-out host copies: program_id -> (np k, np v, tokens); the
+        # buffers are the page_copy staging layout (L, pages, page, KV, Dh)
+        self.host_caches: dict[str, tuple] = {}
+        # page-stamped radix mirror of the scheduler's accounting index
+        # (enable_prefix_sharing); None = no cross-program sharing
+        self.prefix_index: Optional[RadixPrefixIndex] = None
+        self._step = 0                  # logical clock for radix LRU
+        self.prefill_tokens_computed = 0  # TTL savings show up here
         self.decode_tokens_computed = 0
         self.demotions = 0
         self.restores = 0
+        self.shortfall_tokens = 0       # defensive recompute (cache lost)
+        # differential harness: verify every restore round-trips bit-exact
+        self.verify_staging = False
+        self.staging_checks: list[tuple[str, bool]] = []
 
-    def _prompt_tokens(self, req, length: int) -> jax.Array:
-        key = jax.random.fold_in(self._rng, req.request_id)
-        return jax.random.randint(key, (1, length), 0, self.cfg.vocab_size)
+    # --------------------------------------------------- physical sharing
+    def enable_prefix_sharing(self) -> RadixPrefixIndex:
+        """Attach a page-stamped radix index to the runtime: admissions
+        the scheduler serves from its (accounting) radix index are
+        realized as shared physical pages here, and page-pool pressure
+        LRU-evicts unreferenced shared paths."""
+        if self.prefix_index is None:
+            self.prefix_index = RadixPrefixIndex(
+                PrefixConfig(block_size=self.runtime.page_size))
+            self.runtime.attach_index(self.prefix_index)
+            self.runtime.on_pressure = self._relieve_pressure
+        return self.prefix_index
 
+    def _relieve_pressure(self, need: int) -> None:
+        """Page-pool pressure: LRU-evict unreferenced shared radix paths
+        until `need` pages are actually free. A single evict round may
+        free zero pages (the node's pages can still be program-held), so
+        keep evicting until the free list recovers or nothing evictable
+        remains."""
+        rt = self.runtime
+        while len(rt.free) < need and self.prefix_index is not None:
+            if self.prefix_index.evict(max(need, 4)) <= 0:
+                return
+
+    # ------------------------------------------------------ token streams
+    def _stream(self, name: str) -> jax.Array:
+        """Deterministic token ids for a content stream, one id per
+        absolute position (stable across turns and across programs that
+        share the stream)."""
+        s = self._streams.get(name)
+        if s is None:
+            key = jax.random.fold_in(
+                self._rng, zlib.crc32(name.encode()) & 0x7FFFFFFF)
+            s = jax.random.randint(key, (self.max_len,), 0,
+                                   self.cfg.vocab_size)
+            self._streams[name] = s
+        return s
+
+    def prompt_tokens(self, req, start: int, end: int) -> jax.Array:
+        """Prompt ids for positions [start, end): positions inside the
+        shared preamble draw from the shared stream — the physical basis
+        for COW sharing — the rest from the program's own stream."""
+        assert 0 <= start < end <= self.max_len, (start, end, self.max_len)
+        shared = min(req.shared_prefix_len, req.prompt_len) \
+            if req.shared_prefix_id else 0
+        parts = []
+        if start < shared:
+            parts.append(self._stream(req.shared_prefix_id)
+                         [start:min(end, shared)])
+        if end > shared:
+            parts.append(self._stream(req.program_id)[max(start, shared):end])
+        return parts[0] if len(parts) == 1 else jnp.concatenate(parts)
+
+    # --------------------------------------------------- engine KV hooks
     def drop_program(self, program_id: str) -> None:
         """Called on eviction/unpin: the cache is genuinely gone."""
-        self.caches.pop(program_id, None)
+        if program_id in self.runtime.programs:
+            self.runtime.evict(program_id, force=True)
         self.host_caches.pop(program_id, None)
 
     def drop_host_copy(self, program_id: str) -> None:
@@ -59,75 +152,123 @@ class JaxModelBackend:
         dies; any live device cache stays untouched."""
         self.host_caches.pop(program_id, None)
 
-    # ----------------------------------------------- tiered-store hooks
     def offload_program(self, program_id: str) -> None:
-        """TTL-expiry demotion: the device cache moves to a host (numpy)
-        copy — HBM is freed, the context is NOT lost. Paired with the
-        TieredKVStore entry the scheduler created for this program."""
-        entry = self.caches.pop(program_id, None)
-        if entry is not None:
-            cache, length = entry
-            self.host_caches[program_id] = (
-                jax.tree_util.tree_map(np.asarray, cache), length)
-            self.demotions += 1
+        """Demotion (TTL expiry or preemption): batch-gather the
+        program's scattered pages into contiguous staging buffers
+        (``page_copy`` gather kernel), move them to host memory in one
+        copy, free the device pages. HBM is freed; the context is NOT
+        lost — paired with the TieredKVStore entry the scheduler created
+        for this program."""
+        rt = self.runtime
+        e = rt.programs.get(program_id)
+        if e is None or e.length == 0:
+            return
+        k, v, n = rt.stage_out(program_id)
+        self.host_caches[program_id] = (np.asarray(k), np.asarray(v), n)
+        rt.evict(program_id, force=True)
+        self.demotions += 1
 
-    def restore_program(self, program_id: str) -> None:
-        """Offload-tier reload: put the host copy back on device; the
-        next turn decodes against it instead of recomputing."""
+    def restore_program(self, program_id: str,
+                        tokens: Optional[int] = None) -> None:
+        """Offload-tier reload: scatter the staged host copy back into
+        freshly allocated physical pages. ``tokens`` (the store entry's
+        usable prefix — it shrinks when suffix blocks were dropped under
+        tier pressure) truncates the restore; the engine recomputes the
+        rest."""
         entry = self.host_caches.pop(program_id, None)
-        if entry is not None:
-            cache, length = entry
-            self.caches[program_id] = (
-                jax.tree_util.tree_map(jnp.asarray, cache), length)
-            self.restores += 1
+        if entry is None:
+            return                       # lost copy: engine recomputes
+        k, v, n = entry
+        if tokens is not None:
+            n = min(n, int(tokens))
+        if n <= 0:
+            return
+        ps = self.runtime.page_size
+        pages = math.ceil(n / ps)
+        k, v = k[:, :pages], v[:, :pages]
+        ids = self.runtime.restore(program_id, jnp.asarray(k),
+                                   jnp.asarray(v), n)
+        if self.verify_staging:          # differential harness: bit-exact?
+            idsj = jnp.asarray(ids, jnp.int32)
+            back_k = gather_pages(self.runtime.k_pages, idsj,
+                                  interpret=self.runtime.interpret)
+            back_v = gather_pages(self.runtime.v_pages, idsj,
+                                  interpret=self.runtime.interpret)
+            ok = bool(np.array_equal(np.asarray(back_k), k)) and \
+                bool(np.array_equal(np.asarray(back_v), v))
+            self.staging_checks.append((program_id, ok))
+        self.restores += 1
+
+    # ------------------------------------------------------------ execute
+    def _req_hashes(self, req):
+        return request_block_hashes(req, self.runtime.page_size)
 
     @staticmethod
     def _bucket(n: int) -> int:
         """Pad chunk lengths to powers of two: bounds XLA recompilation to
-        O(log max_chunk) shapes (the TPU serving constraint, DESIGN.md §3)."""
+        O(log max_chunk) shapes (the TPU serving constraint)."""
         b = 16
         while b < n:
             b *= 2
         return b
 
+    def _materialize(self, req, target: int, expected: int) -> None:
+        """Ensure the program's pages cover [0, target) — recompute any
+        gap from the deterministic streams (defensive: a lost host copy
+        or a truncated restore self-heals here). The forward pass runs at
+        a bucketed length; only the real tokens' KV lands in pages.
+
+        ``expected`` is how many leading tokens the *engine* believes are
+        already materialized (the admission's cached prefix during
+        prefill; everything during decode) — recomputing below it is a
+        shortfall, counted so truncated restores and lost copies are
+        visible in the differential report. Recomputed generated-token
+        positions draw from the program stream, not the actual sampled
+        ids — a documented divergence from an unpreempted run that the
+        counter makes measurable."""
+        rt = self.runtime
+        e = rt.programs.get(req.program_id)
+        start = e.length if e is not None else 0
+        if start < target:
+            toks = self.prompt_tokens(req, start, target)
+            rt.prefill(self.params, req.program_id, toks,
+                       pad_to=self._bucket(target - start))
+            self.prefill_tokens_computed += target - start
+            if start < min(target, expected):
+                self.shortfall_tokens += min(target, expected) - start
+
     def execute(self, prefill, decode) -> float:
         t0 = time.time()
+        rt = self.runtime
+        self._step += 1
+        now = float(self._step)
         for work in prefill:
             req = work.req
             pid = req.program_id
-            entry = self.caches.get(pid)
-            if entry is None or work.context == 0 and not req.served_from_pin:
-                cache = self.model.init_cache(1, self.max_len)
-                length = 0
-            else:
-                cache, length = entry
-            # (engine guarantees work.context == current cache length except
-            # on TTL hits, where cached_prefix tokens are already in place)
-            bucket = self._bucket(work.chunk)
-            toks = self._prompt_tokens(req, bucket)    # padded; rows beyond
-            _, cache = self.model.forward(             # work.chunk are junk
-                self.params, tokens=toks, cache=cache,  # overwritten later
-                cache_len=jnp.asarray(work.context, jnp.int32),
-                mode="extend", logits_slice=None)
-            self.caches[pid] = (cache, work.context + work.chunk)
-            self.prefill_tokens_computed += work.chunk
+            if work.context == 0 and pid in rt.programs:
+                # full recompute: the engine decided the old cache is
+                # unusable (preemption / expiry without a tier copy)
+                rt.evict(pid, force=True)
+            if pid not in rt.programs and work.context > 0 \
+                    and req.served_from_shared \
+                    and self.prefix_index is not None:
+                # radix admission -> shared physical pages (COW adoption)
+                rt.adopt_prefix(self.prefix_index, pid, self._req_hashes(req),
+                                now=now, max_tokens=work.context)
+            self._materialize(req, work.context + work.chunk,
+                              expected=work.context)
+            if work.context + work.chunk >= req.prompt_len \
+                    and self.prefix_index is not None:
+                # prompt complete: publish / dedup into the shared index
+                rt.publish_prefix(self.prefix_index, pid,
+                                  self._req_hashes(req), now=now)
         for req in decode:
             pid = req.program_id
-            entry = self.caches.get(pid)
-            if entry is None:                      # defensive: cold decode
-                cache, length = self.model.init_cache(1, self.max_len), \
-                    req.prompt_len
-            else:
-                cache, length = entry
-            prev = self.tokens.get(pid)
-            tok = prev[None] if prev is not None else \
-                self._prompt_tokens(req, 1)
-            logits, cache = self.model.forward(
-                self.params, tokens=tok.reshape(1, 1), cache=cache,
-                cache_len=jnp.asarray(length, jnp.int32), mode="decode",
-                logits_slice=1)
-            nxt = jnp.argmax(logits[0, -1])
-            self.tokens[pid] = nxt.reshape(1)
-            self.caches[pid] = (cache, length + 1)
+            # pages must cover every position a decode step attends to:
+            # prompt + already-generated tokens (minus the pending one) —
+            # and at decode time the engine believes ALL of them exist
+            target = req.prompt_len + max(req.generated - 1, 0)
+            self._materialize(req, target, expected=target)
+            rt.decode(self.params, pid)
             self.decode_tokens_computed += 1
         return max(time.time() - t0, 1e-6)

@@ -5,12 +5,22 @@ engine iteration (Sarathi/vLLM-style): a token budget of chunked prefill
 plus one decode token for every running sequence. The scheduler (Algorithm
 1) decides admission order and KV retention; the execution backend supplies
 the step duration (virtual-clock cost model here, real JAX/TPU execution in
-``backend.JaxBackend``).
+``backend.JaxModelBackend``).
 
 With ``EngineConfig.prefix`` set, the engine carries a per-replica
 shared-prefix radix index (:mod:`repro.serving.prefix`): finished prefills
 are published into it, admissions match against it, and decode-time memory
 pressure reclaims unreferenced cache before preempting anyone.
+
+Backends carrying a :class:`~repro.serving.paged_runtime.PagedKVRuntime`
+are driven physically: the engine sizes the page pool against its block
+pool, demote/reload hooks stage pages out/in through the ``page_copy``
+staging buffers (one bulk transfer per tier move), preemption takes the
+same demotion path, and radix-served admissions adopt shared physical
+pages (copy-on-write). Every scheduling decision is appended to
+``StepEvents.decisions`` — the differential replay harness
+(:mod:`repro.sim.replay`) compares these streams between the logical and
+physical stacks.
 """
 from __future__ import annotations
 
@@ -20,7 +30,7 @@ from typing import Callable, Optional, Protocol
 
 from repro.configs.base import ModelConfig
 from repro.core.policies import make_policy
-from repro.core.scheduler import Scheduler
+from repro.core.scheduler import Scheduler, materialized_tokens
 from repro.core.tool_handler import ToolCallHandler
 from repro.core.ttl import TTLConfig, TTLModel
 from repro.core.types import ProgramStats, Request, RequestState
@@ -85,6 +95,10 @@ class StepEvents:
     tool_started: list = dataclasses.field(default_factory=list)  # (req, tool)
     admitted: list = dataclasses.field(default_factory=list)
     idle: bool = False
+    # scheduling decisions made during this step, in order (admit source,
+    # pin/unpin, demote/evict, reload, preempt) — the differential replay
+    # harness compares these streams between logical and physical runs
+    decisions: list = dataclasses.field(default_factory=list)
 
 
 class Engine:
@@ -173,6 +187,24 @@ class Engine:
                 # scheduler only sees the program it is currently freeing
                 self.kvstore.on_drop = self.backend.drop_host_copy
 
+        # --- physical page runtime (paged backends) ---
+        # a backend carrying a PagedKVRuntime gets it sized 1:1 with the
+        # accounting block pool (admission control then bounds physical
+        # pages too) and, with prefix sharing on, a page-stamped radix
+        # mirror so scheduler radix admissions become shared physical
+        # pages (COW) instead of recomputed ones
+        runtime = getattr(self.backend, "runtime", None)
+        if runtime is not None:
+            if runtime.page_size != ecfg.block_size:
+                raise ValueError(
+                    f"backend page_size {runtime.page_size} != engine "
+                    f"block_size {ecfg.block_size}: physical pages and "
+                    f"accounting blocks must be the same granularity")
+            runtime.grow(self.blocks.total + 16)
+            if self.prefix_index is not None \
+                    and hasattr(self.backend, "enable_prefix_sharing"):
+                self.backend.enable_prefix_sharing()
+
         self.running: list[Request] = []
         self.programs: dict[str, ProgramStats] = {}
         self.steps = 0
@@ -210,6 +242,7 @@ class Engine:
     def step(self, now: float) -> StepEvents:
         ev = StepEvents()
         self.clock = now            # anchors TransferEngine-based pricing
+        self.scheduler.decision_sink = ev.decisions
         # 1. admission (Algorithm 1 Schedule())
         cap = self.ecfg.max_batch - len(self.running)
         if cap > 0:
@@ -257,6 +290,12 @@ class Engine:
                     self._preempt(victim, now)
                     if victim in decode_reqs:
                         decode_reqs.remove(victim)
+                    # a mid-prefill victim must leave the batch too: its
+                    # blocks are freed and its pages staged out/evicted —
+                    # executing its stale chunk would advance a PREEMPTED
+                    # request and re-create the entry the backend dropped
+                    prefill_work = [w for w in prefill_work
+                                    if w.req is not victim]
 
         # 4. execute. Tier reloads are DMA transfers on their own channels,
         # so they overlap the step's compute; only the slower of the two
@@ -339,11 +378,14 @@ class Engine:
         self.blocks.free_request(r.request_id)
         self.scheduler._release_prefix(r)   # shared path stays cached; a
         # re-admission will radix-match the already-published prompt
-        if self.offload is not None:
-            tokens = r.prefill_pos + r.generated
-            self.offload.offload(r.program_id, tokens,
-                                 tokens * self.profile.kv_bytes_per_token,
-                                 now=now)
+        # same release protocol as finish/TTL expiry: a successful offload
+        # demotes (the backend stages the pages out through page_copy and
+        # keeps a host copy), otherwise the physical KV is genuinely
+        # evicted. Credit only the MATERIALIZED tokens (the last sampled
+        # token's KV was never appended).
+        self.scheduler._log("preempt", r.program_id, r.turn_idx)
+        self.scheduler.release_program(
+            r.program_id, materialized_tokens(r), now, reason="preempt")
         r.state = RequestState.PREEMPTED
         r.prefill_pos = 0
         r.cached_prefix = 0

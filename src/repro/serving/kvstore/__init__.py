@@ -17,9 +17,11 @@ the HBM line and the transfers across it.
 """
 from repro.serving.kvstore.store import (KVEntry, KVStoreConfig, Span,
                                          StoreStats, TieredKVStore)
-from repro.serving.kvstore.transfer import Channel, Transfer, TransferEngine
+from repro.serving.kvstore.transfer import (BandwidthCurve, Channel, Transfer,
+                                            TransferEngine, resolve_bandwidth)
 
 __all__ = [
-    "Channel", "KVEntry", "KVStoreConfig", "Span", "StoreStats",
-    "TieredKVStore", "Transfer", "TransferEngine",
+    "BandwidthCurve", "Channel", "KVEntry", "KVStoreConfig", "Span",
+    "StoreStats", "TieredKVStore", "Transfer", "TransferEngine",
+    "resolve_bandwidth",
 ]

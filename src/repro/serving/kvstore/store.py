@@ -34,7 +34,7 @@ import math
 from collections import OrderedDict
 from typing import Optional
 
-from repro.serving.kvstore.transfer import TransferEngine
+from repro.serving.kvstore.transfer import TransferEngine, resolve_bandwidth
 
 
 @dataclasses.dataclass
@@ -48,6 +48,12 @@ class KVStoreConfig:
     link_latency_s: float = 0.0        # fixed per-transfer latency
     block_bytes: float = 1.0           # bytes per accounting block
     enabled: bool = True
+    # measured (message_size, bandwidth) calibration points per channel
+    # (BandwidthCurve.from_points); None = constant *_bw above
+    h2d_curve: Optional[tuple] = None
+    d2h_curve: Optional[tuple] = None
+    ssd_read_curve: Optional[tuple] = None
+    ssd_write_curve: Optional[tuple] = None
 
     @property
     def dram_blocks(self) -> int:
@@ -138,7 +144,10 @@ class TieredKVStore:
                  transfer: Optional[TransferEngine] = None):
         self.cfg = cfg
         self.transfer = transfer or TransferEngine(
-            cfg.h2d_bw, cfg.d2h_bw, cfg.ssd_read_bw, cfg.ssd_write_bw,
+            resolve_bandwidth(cfg.h2d_curve, cfg.h2d_bw),
+            resolve_bandwidth(cfg.d2h_curve, cfg.d2h_bw),
+            resolve_bandwidth(cfg.ssd_read_curve, cfg.ssd_read_bw),
+            resolve_bandwidth(cfg.ssd_write_curve, cfg.ssd_write_bw),
             cfg.link_latency_s)
         self.entries: "OrderedDict[str, KVEntry]" = OrderedDict()
         self.dram_used_blocks = 0
@@ -208,18 +217,44 @@ class TieredKVStore:
     # ------------------------------------------------------------ demotion
     def _demote_lru(self, now: float = 0.0) -> bool:
         """DRAM pressure: move the LRU unpinned entry's DRAM blocks to
-        SSD, or drop the entry when SSD can't take them. True if any
+        SSD. When SSD can't take the whole run, the entry sheds its own
+        *suffix* blocks (SSD tail first, then DRAM tail) until the
+        surviving contiguous prefix fits — a shrunk entry still covers
+        the next turn's leading tokens, which beats dropping it outright
+        (only if nothing survives is the entry dropped). True if any
         DRAM blocks were freed."""
         for pid, e in self.entries.items():
             if e.dram_blocks == 0 or e.pinned:
                 continue
             n = e.dram_blocks
-            if self.cfg.ssd_blocks and self.ssd_free_blocks() >= n:
-                self._move_to_ssd(e, n, now)
+            free = self.ssd_free_blocks() if self.cfg.ssd_blocks else 0
+            if free < n and e.ssd_blocks:
+                # shed the entry's SSD tail: the DRAM run is the prefix
+                # head, the most adoptable part of the entry
+                k = min(n - free, e.ssd_blocks)
+                self._drop_suffix_blocks(e, ssd=k)
+                free += k
+            if free < n:
+                # still short: shed the DRAM tail too; keep the longest
+                # prefix SSD can hold
+                self._drop_suffix_blocks(e, dram=n - free)
+                n = free
+            if n <= 0:
+                self.drop(pid)          # nothing survived
             else:
-                self.drop(pid)
+                self._move_to_ssd(e, n, now)
             return True
         return False
+
+    def _drop_suffix_blocks(self, e: KVEntry, dram: int = 0,
+                            ssd: int = 0) -> None:
+        """Shrink an entry from its tail (partial drop: ``e.tokens`` — the
+        usable contiguous prefix — shrinks proportionally)."""
+        e.dram_blocks -= dram
+        e.ssd_blocks -= ssd
+        self.dram_used_blocks -= dram
+        self.ssd_used_blocks -= ssd
+        self.stats.dropped_blocks += dram + ssd
 
     def _move_to_ssd(self, e: KVEntry, n: int, now: float) -> None:
         nbytes = e.nbytes_total * n / e.blocks_total

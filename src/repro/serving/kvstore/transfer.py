@@ -22,10 +22,20 @@ DRAM→HBM) — the corrected pricing that replaces the old one-hop
 is already in flight on their channel. :meth:`TransferEngine.reload_eta`
 prices that chain against current queue state without committing;
 ``commit=True`` actually occupies the channels.
+
+Bandwidth is either a constant (the default, the paper's model) or a
+:class:`BandwidthCurve`: a piecewise-linear message-size-dependent
+transfer-time model calibrated from measured ``(message_size, bw)``
+points, the way :class:`~repro.serving.profiler.HardwareProfile.mfu`
+calibrates compute. Small messages on a real PCIe/NVMe link achieve a
+fraction of peak bandwidth; the curve prices that, so demoting many
+small entries is correctly more expensive per byte than one bulk
+staging transfer.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Union
 
 
 @dataclasses.dataclass
@@ -40,25 +50,110 @@ class Transfer:
         return self.end - self.start
 
 
+@dataclasses.dataclass(frozen=True)
+class BandwidthCurve:
+    """Message-size-dependent transfer time, calibrated from measured
+    ``(size_bytes, achieved_bw)`` samples (ascending sizes).
+
+    The model interpolates *transfer time* piecewise-linearly between the
+    knots ``t_i = size_i / bw_i`` (and extrapolates at ``bw[0]`` below the
+    first knot, ``bw[-1]`` above the last), so transfer seconds are
+    monotone non-decreasing in message size by construction — a curve
+    whose knot times decrease (physically impossible: sending more bytes
+    can't finish sooner) is rejected at construction time."""
+
+    sizes: tuple
+    bws: tuple
+
+    def __post_init__(self):
+        assert len(self.sizes) == len(self.bws) >= 1, "need >= 1 sample"
+        assert all(s > 0 for s in self.sizes) and \
+            all(b > 0 for b in self.bws), (self.sizes, self.bws)
+        knots = self.knot_seconds()
+        for a, b in zip(self.sizes, self.sizes[1:]):
+            if b <= a:
+                raise ValueError(f"sizes must be ascending: {self.sizes}")
+        for a, b in zip(knots, knots[1:]):
+            if b < a:
+                raise ValueError(
+                    "calibration not monotone: a larger message would "
+                    f"finish sooner (knot times {knots})")
+
+    @classmethod
+    def from_points(cls, points) -> "BandwidthCurve":
+        """Build from an iterable of ``(size_bytes, bw)`` pairs."""
+        pts = sorted((float(s), float(b)) for s, b in points)
+        return cls(tuple(s for s, _ in pts), tuple(b for _, b in pts))
+
+    def knot_seconds(self) -> tuple:
+        return tuple(s / b for s, b in zip(self.sizes, self.bws))
+
+    @property
+    def peak_bw(self) -> float:
+        return max(self.bws)
+
+    def seconds(self, nbytes: float) -> float:
+        """Latency-free transfer seconds for an ``nbytes`` message."""
+        if nbytes <= 0:
+            return 0.0
+        sizes, knots = self.sizes, self.knot_seconds()
+        if nbytes <= sizes[0]:
+            return nbytes / self.bws[0]
+        if nbytes >= sizes[-1]:
+            return knots[-1] + (nbytes - sizes[-1]) / self.bws[-1]
+        for i in range(len(sizes) - 1):
+            if nbytes <= sizes[i + 1]:
+                f = (nbytes - sizes[i]) / (sizes[i + 1] - sizes[i])
+                return knots[i] + f * (knots[i + 1] - knots[i])
+        return knots[-1]  # unreachable
+
+    def bandwidth(self, nbytes: float) -> float:
+        """Effective bytes/s at this message size."""
+        t = self.seconds(nbytes)
+        return nbytes / t if t > 0 else self.peak_bw
+
+
+Bandwidth = Union[float, BandwidthCurve]
+
+
+def resolve_bandwidth(curve_points, const: float) -> Bandwidth:
+    """Config helper: measured (size, bw) points win over the constant."""
+    return BandwidthCurve.from_points(curve_points) if curve_points \
+        else const
+
+
 class Channel:
     """Serial transfer queue: one direction of one link."""
 
-    def __init__(self, name: str, bw: float, latency: float = 0.0):
-        assert bw > 0, (name, bw)
+    def __init__(self, name: str, bw: Bandwidth, latency: float = 0.0):
+        if isinstance(bw, BandwidthCurve):
+            self.curve: Optional[BandwidthCurve] = bw
+            self.bw = bw.peak_bw            # nominal peak, for insight
+        else:
+            assert bw > 0, (name, bw)
+            self.curve = None
+            self.bw = bw
         self.name = name
-        self.bw = bw
         self.latency = latency
         self.busy_until = 0.0          # when the queue drains
         self.bytes_moved = 0.0
         self.n_transfers = 0
+
+    def seconds(self, nbytes: float) -> float:
+        """Occupancy of a single transfer (latency + size-dependent time);
+        0 for empty messages."""
+        if nbytes <= 0:
+            return 0.0
+        base = self.curve.seconds(nbytes) if self.curve is not None \
+            else nbytes / self.bw
+        return self.latency + base
 
     def eta(self, nbytes: float, now: float, earliest: float = 0.0
             ) -> tuple[float, float]:
         """(start, end) the next transfer would get — no commitment.
         ``earliest`` lower-bounds the start (source-readiness chaining)."""
         start = max(now, self.busy_until, earliest)
-        dur = self.latency + max(nbytes, 0.0) / self.bw if nbytes > 0 else 0.0
-        return start, start + dur
+        return start, start + self.seconds(nbytes)
 
     def submit(self, nbytes: float, now: float, earliest: float = 0.0
                ) -> Transfer:
@@ -77,8 +172,9 @@ class TransferEngine:
     model and admission: how long until a (dram_bytes, ssd_bytes) prefix
     is resident in HBM, given everything already in flight."""
 
-    def __init__(self, h2d_bw: float, d2h_bw: float, ssd_read_bw: float,
-                 ssd_write_bw: float, latency: float = 0.0):
+    def __init__(self, h2d_bw: Bandwidth, d2h_bw: Bandwidth,
+                 ssd_read_bw: Bandwidth, ssd_write_bw: Bandwidth,
+                 latency: float = 0.0):
         self.h2d = Channel("h2d", h2d_bw, latency)
         self.d2h = Channel("d2h", d2h_bw, latency)
         self.ssd_read = Channel("ssd_read", ssd_read_bw, latency)
@@ -128,13 +224,12 @@ class TransferEngine:
         done = now
         if dram_bytes > 0:
             start = max(now, h2d_free, dram_ready)
-            h2d_free = start + self.h2d.latency + dram_bytes / self.h2d.bw
+            h2d_free = start + self.h2d.seconds(dram_bytes)
             done = h2d_free
         if ssd_bytes > 0:
             rstart, staged = self.ssd_read.eta(ssd_bytes, now, ssd_ready)
             start = max(now, h2d_free, staged)
-            done = max(done,
-                       start + self.h2d.latency + ssd_bytes / self.h2d.bw)
+            done = max(done, start + self.h2d.seconds(ssd_bytes))
         return done - now
 
     def usage(self) -> dict:

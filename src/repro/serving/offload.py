@@ -36,6 +36,12 @@ class OffloadConfig:
     ssd_write_bw: float = 0.0            # 0 = half of ssd_bw
     link_latency_s: float = 0.0
     block_bytes: float = 1.0             # store accounting granularity
+    # measured (message_size, bw) calibration points per channel — turned
+    # into message-size-dependent BandwidthCurves (constant when None)
+    h2d_curve: Optional[tuple] = None
+    d2h_curve: Optional[tuple] = None
+    ssd_read_curve: Optional[tuple] = None
+    ssd_write_curve: Optional[tuple] = None
 
     def store_config(self) -> KVStoreConfig:
         return KVStoreConfig(
@@ -44,7 +50,10 @@ class OffloadConfig:
             ssd_read_bw=self.ssd_bw,
             ssd_write_bw=self.ssd_write_bw or self.ssd_bw / 2,
             link_latency_s=self.link_latency_s,
-            block_bytes=self.block_bytes, enabled=self.enabled)
+            block_bytes=self.block_bytes, enabled=self.enabled,
+            h2d_curve=self.h2d_curve, d2h_curve=self.d2h_curve,
+            ssd_read_curve=self.ssd_read_curve,
+            ssd_write_curve=self.ssd_write_curve)
 
 
 class OffloadManager:

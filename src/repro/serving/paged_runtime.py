@@ -40,6 +40,11 @@ from repro.models.mlp import mlp_apply
 from repro.models.transformer import Model
 
 
+#: families whose per-token KV lives in uniform pages (the runtime's —
+#: and therefore JaxModelBackend's — supported set)
+PAGED_FAMILIES = ("dense", "moe", "audio", "vlm")
+
+
 @dataclasses.dataclass
 class ProgramEntry:
     pages: list[int]
@@ -50,7 +55,7 @@ class ProgramEntry:
 class PagedKVRuntime:
     def __init__(self, cfg: ModelConfig, n_pages: int = 64,
                  page_size: int = 16, interpret: bool = True):
-        assert cfg.family in ("dense", "moe", "audio", "vlm") and \
+        assert cfg.family in PAGED_FAMILIES and \
             not cfg.local_global_alternating, "uniform-attention families"
         self.cfg = cfg
         self.model = Model(cfg)
@@ -66,9 +71,19 @@ class PagedKVRuntime:
         self.programs: dict[str, ProgramEntry] = {}
         self._last: dict[str, jax.Array] = {}      # last token per program
         self.cow_splits = 0
+        # called with a page deficit when the free list runs dry — the
+        # owner (an engine backend) LRU-evicts unreferenced radix-held
+        # pages before the allocation is retried (page-pool pressure)
+        self.on_pressure = None  # type: Optional[callable]
+        # differential-harness hooks: when set, every COW split is
+        # verified bit-exact (copied page == source page) and recorded
+        self.verify_copies = False
+        self.copy_checks: list[bool] = []
 
     # ------------------------------------------------------------- alloc
     def _alloc_page(self) -> int:
+        if not self.free and self.on_pressure is not None:
+            self.on_pressure(1)
         if not self.free:
             raise MemoryError("out of KV pages")
         pi = self.free.pop()
@@ -87,6 +102,23 @@ class PagedKVRuntime:
         while len(e.pages) < need:
             e.pages.append(self._alloc_page())
 
+    def grow(self, n_pages_total: int) -> None:
+        """Grow the physical pools to ``n_pages_total`` pages (no-op if
+        already at least that big). The engine calls this at wiring time
+        so the page pool covers its accounting block pool 1:1 — the
+        BlockManager's admission control then guarantees the runtime
+        never OOMs before accounting does."""
+        extra = n_pages_total - self.n_pages
+        if extra <= 0:
+            return
+        pad = (self.k_pages.shape[0], extra) + self.k_pages.shape[2:]
+        self.k_pages = jnp.concatenate(
+            [self.k_pages, jnp.zeros(pad, self.k_pages.dtype)], axis=1)
+        self.v_pages = jnp.concatenate(
+            [self.v_pages, jnp.zeros(pad, self.v_pages.dtype)], axis=1)
+        self.free.extend(range(self.n_pages, n_pages_total))
+        self.n_pages = n_pages_total
+
     def _writable_page(self, e: ProgramEntry, idx: int) -> int:
         """The physical page for e's logical block `idx`, made exclusive:
         a shared page (refs > 1) is COW-split through the page_copy
@@ -101,6 +133,12 @@ class PagedKVRuntime:
                                   interpret=self.interpret)
         self.v_pages = copy_pages(self.v_pages, src, dst,
                                   interpret=self.interpret)
+        if self.verify_copies:          # differential harness: bit-exact?
+            ok = bool(jnp.array_equal(self.k_pages[:, new],
+                                      self.k_pages[:, pi])) and \
+                bool(jnp.array_equal(self.v_pages[:, new],
+                                     self.v_pages[:, pi]))
+            self.copy_checks.append(ok)
         self.refs[pi] -= 1
         e.pages[idx] = new
         self.cow_splits += 1
@@ -223,8 +261,19 @@ class PagedKVRuntime:
                 length: int) -> list[int]:
         """Scatter reloaded contiguous staging buffers into freshly
         allocated physical pages (the H2D leg of a promotion)."""
+        stale = self.programs.pop(program_id, None)
+        if stale is not None:           # defensive: never leak pages
+            for pi in stale.pages:
+                self._deref(pi)
         n = k_staging.shape[1]
-        pages = [self._alloc_page() for _ in range(n)]
+        pages: list[int] = []
+        try:
+            for _ in range(n):
+                pages.append(self._alloc_page())
+        except MemoryError:             # roll back the partial allocation
+            for pi in pages:
+                self._deref(pi)
+            raise
         ids = jnp.asarray(pages, jnp.int32)
         self.k_pages = scatter_pages(self.k_pages, k_staging, ids,
                                      interpret=self.interpret)
@@ -234,25 +283,42 @@ class PagedKVRuntime:
         return pages
 
     # ----------------------------------------------------------- prefill
-    def prefill(self, params, program_id: str, tokens: jax.Array) -> None:
+    def prefill(self, params, program_id: str, tokens: jax.Array,
+                pad_to: Optional[int] = None) -> jax.Array:
         """Run the model's prefill and scatter the contiguous per-layer KV
-        into this program's (scattered) physical pages."""
+        into this program's (scattered) physical pages. Returns the final
+        *real* position's logits and seeds the program's greedy
+        continuation (so a chunked prefill's last chunk leaves decode
+        ready to run).
+
+        ``pad_to`` pads the forward pass to a bucketed length (causal
+        attention makes the trailing junk tokens invisible to the real
+        ones, and only the real KV is scattered into pages) — callers use
+        power-of-two buckets to bound XLA recompilation to
+        O(log max_chunk) shapes, the TPU serving constraint."""
         cfg = self.cfg
         S = tokens.shape[-1]
+        Sp = max(pad_to, S) if pad_to is not None else S
+        if Sp > S:
+            tokens = jnp.concatenate(
+                [tokens, jnp.zeros((Sp - S,), tokens.dtype)])
         e = self.programs.setdefault(program_id, ProgramEntry([], 0))
         start = e.length
-        self._ensure_capacity(e, start + S)
+        self._ensure_capacity(e, start + S)       # pages for REAL tokens only
         cap = len(e.pages) * self.page_size
-        cache = self.model.init_cache(1, max(cap, start + S))
+        cache = self.model.init_cache(1, max(cap, start + Sp))
         if start:
             # re-materialize existing pages into the contiguous scratch
             cache = self._gather_into(cache, e)
-        _, cache = self.model.forward(
-            params, tokens=tokens.reshape(1, S), cache=cache,
+        # keep logits from the last real position onward (Sp - S + 1 rows)
+        logits, cache = self.model.forward(
+            params, tokens=tokens.reshape(1, Sp), cache=cache,
             cache_len=jnp.asarray(start, jnp.int32),
-            mode="extend" if start else "prefill", logits_slice=1)
+            mode="extend" if start else "prefill", logits_slice=Sp - S + 1)
         self._scatter_from(cache, e, start, S)
         e.length = start + S
+        self._last[program_id] = jnp.argmax(logits[0, 0]).astype(jnp.int32)
+        return logits[0, 0]
 
     def _scatter_from(self, cache, e: ProgramEntry, start: int, count: int):
         """Copy cache[k/v][:, 0, start:start+count] into physical pages."""
@@ -341,3 +407,28 @@ class PagedKVRuntime:
 
     def _last_token(self, params, program_id: str) -> jax.Array:
         return self._last[program_id]
+
+    # ---------------------------------------------------------- invariants
+    def check(self, index=None) -> None:
+        """Assert page-refcount conservation (tests / debugging): every
+        page's refcount equals the number of program block-table slots
+        plus radix-tree stamps referencing it; free pages carry no refs;
+        free + referenced partitions the pool exactly."""
+        held: dict[int, int] = {}
+        for e in self.programs.values():
+            for pi in e.pages:
+                held[pi] = held.get(pi, 0) + 1
+        if index is not None:
+            stack = [index.root]
+            while stack:
+                n = stack.pop()
+                stack.extend(n.children.values())
+                for pi in (n.page_ids or []):
+                    held[pi] = held.get(pi, 0) + 1
+        assert held == self.refs, \
+            {"expected": held, "refs": self.refs}
+        free = set(self.free)
+        assert len(free) == len(self.free), "free list has duplicates"
+        assert free.isdisjoint(self.refs), free & set(self.refs)
+        assert len(free) + len(self.refs) == self.n_pages, \
+            (len(free), len(self.refs), self.n_pages)

@@ -1,0 +1,387 @@
+"""Differential logical-vs-physical replay harness.
+
+The paper's claims are exercised end-to-end on the accounting-only
+``SimBackend``; the physical path (``JaxModelBackend`` over a
+``PagedKVRuntime`` with the ``page_copy`` staging kernels and the tiered
+store) must make the *same* scheduling decisions and keep KV *bit-exact*
+across every tier move. This module proves both, the way KVFlow/TokenCake
+validate their cache managers against a logical twin:
+
+1. **Traces** — a seeded smoke workload is serialized to JSONL as
+   submit / tool_pause / finish events (one line per event, sorted keys:
+   the same seed is byte-identical across runs). ``record_trace`` /
+   ``load_trace`` round-trip it.
+
+2. **Differential run** — the identical trace is executed twice through
+   identically configured engines: once on ``SimBackend`` (logical), once
+   on ``JaxModelBackend`` + ``PagedKVRuntime`` (physical), the latter
+   wrapped in a :class:`ShadowClockBackend` that runs the real model but
+   reports the *analytic cost-model duration*, so both runs share one
+   virtual clock. Every engine step appends its scheduling decisions
+   (admit source, pin/unpin, demote/evict, reload, preempt — see
+   ``Scheduler.decision_sink``) to a log; the two logs must be identical
+   step by step.
+
+3. **Bit-exactness** — during the physical run, every offload restore is
+   round-tripped through the staging gather and compared against the host
+   copy, and every COW split compares the copied page against its source
+   (``verify_staging`` / ``verify_copies``). Any mismatch fails the run.
+
+Run the standing regression gate (3 seeded smoke traces, used by the
+``replay-differential`` CI job)::
+
+    PYTHONPATH=src python -m repro.sim.replay --seeds 0 1 2 --out /tmp/replay
+
+A divergence report names the first differing step: its virtual time and
+the decision tuples each side produced from that point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional
+
+from repro.configs import get_config
+from repro.core.ttl import TTLConfig
+from repro.core.types import Program, Turn
+from repro.serving.engine import Engine, EngineConfig, SimBackend
+from repro.serving.offload import OffloadConfig
+from repro.serving.prefix import PrefixConfig
+from repro.serving.profiler import CostModel, HardwareProfile, build_profile
+from repro.serving.router import Router
+from repro.sim.runner import Simulator
+from repro.sim.workload import WorkloadSpec, generate_programs
+
+#: CPU-fast workload statistically shaped like SWE-Bench but sized for the
+#: smoke models (short contexts, tiny outputs): real-model replay stays in
+#: seconds, while still producing TTL pins/expiries, demotions, reloads,
+#: preemptions and shared-prefix (COW) admissions.
+SMOKE_SPEC = WorkloadSpec(
+    name="replay-smoke",
+    mean_turns=3.0, std_turns=0.8,
+    tool_mean_s=0.6, tool_std_s=0.8,
+    tokens_mean=300, tokens_std=60,
+    output_frac=0.05, max_context=448,
+    tools=(("ls", 0.4, 0.15, 0.5), ("pytest", 0.3, 1.2, 0.8),
+           ("web", 0.3, 0.4, 1.0)),
+    min_turn_tokens=48, min_output_tokens=3, min_new_tokens=24,
+)
+
+
+@dataclasses.dataclass
+class ReplayConfig:
+    """One differential scenario: engine + tier sizing (identical for the
+    logical and physical runs) and the smoke model to execute."""
+    arch: str = "qwen2-1.5b"
+    policy: str = "continuum"
+    block_size: int = 16
+    chunk_size: int = 128
+    max_batch: int = 8
+    total_blocks: int = 112           # engine HBM pool (floors at 64)
+    dram_blocks: int = 40             # offload DRAM tier, in engine blocks
+    ssd_blocks: int = 16              # small on purpose: forces suffix drops
+    h2d_bw_blocks: float = 400.0      # tier bandwidths in blocks/s
+    ssd_bw_blocks: float = 80.0
+    share_ratio: float = 0.25         # cross-program preamble (COW path)
+    max_ttl: float = 1.5              # short TTLs: expiry/demote happen
+    max_seconds: float = 3600.0
+    max_len: int = 512                # backend stream/page horizon
+    # deliberately slow virtual chip: smoke-model steps then take real
+    # virtual time, queueing delays become positive, and the TTL solver
+    # actually chooses to pin (T-bar > 0) — without this every retention
+    # decision degenerates to "don't" and the pin/expiry/deadlock paths
+    # go unexercised
+    hw_flops: float = 1e8
+    hw_hbm_bw: float = 2e7
+
+    def hardware(self) -> HardwareProfile:
+        return HardwareProfile(flops=self.hw_flops, hbm_bw=self.hw_hbm_bw)
+
+    def engine_config(self, block_bytes: float) -> EngineConfig:
+        return EngineConfig(
+            policy=self.policy, max_batch=self.max_batch,
+            chunk_size=self.chunk_size, block_size=self.block_size,
+            kv_budget_bytes=self.total_blocks * block_bytes,
+            offload=OffloadConfig(
+                dram_bytes=self.dram_blocks * block_bytes,
+                ssd_bytes=self.ssd_blocks * block_bytes,
+                h2d_bw=self.h2d_bw_blocks * block_bytes,
+                ssd_bw=self.ssd_bw_blocks * block_bytes),
+            prefix=PrefixConfig(),
+            ttl=TTLConfig(cold_start_k=4, max_ttl=self.max_ttl,
+                          exp_unit_mean=0.3))
+
+
+# ---------------------------------------------------------------- trace io
+def seeded_programs(seed: int, n: int = 6, rate_jps: float = 3.0,
+                    spec: WorkloadSpec = SMOKE_SPEC,
+                    share_ratio: float = 0.25,
+                    twins: bool = True) -> list[Program]:
+    """Seeded smoke workload. With ``twins``, a deterministic pair of
+    programs running the *same agent template* is appended: their whole
+    first-turn prompt (160 tokens, a multiple of the block size) comes
+    from one shared stream, so the second twin's admission radix-matches
+    the full prompt, is capped at ``prompt_len - 1``, and adopts
+    mid-page — the guaranteed copy-on-write split the differential
+    harness must see verified."""
+    progs = generate_programs(spec, n=n, rate_jps=rate_jps, seed=seed,
+                              share_ratio=share_ratio, prefix_groups=1)
+    if twins:
+        tmpl = f"{spec.name}/twin-{seed}"
+        # twin1 arrives well after twin0's first prefill completed and
+        # published, so its admission full-prompt radix-matches
+        for j, t0 in ((0, 0.25), (1, 2.6)):
+            progs.append(Program(
+                program_id=f"{spec.name}-twin{j}-{seed}",
+                arrival_time=t0,
+                turns=[Turn(new_tokens=160, output_tokens=3, tool="ls",
+                            tool_duration=0.3,
+                            output_text="```bash\nls twin\n```"),
+                       Turn(new_tokens=48, output_tokens=3, tool=None,
+                            tool_duration=0.0, output_text="Final answer.")],
+                shared_prefix_tokens=160, shared_prefix_id=tmpl))
+    return progs
+
+
+def _turn_payload(t: Turn) -> dict:
+    return {"new_tokens": t.new_tokens, "output_tokens": t.output_tokens,
+            "tool": t.tool, "tool_duration": t.tool_duration,
+            "output_text": t.output_text}
+
+
+def record_trace(programs: list[Program], path) -> None:
+    """Serialize a workload as replayable JSONL events: ``submit`` (turn 0
+    at the program's arrival time), ``tool_pause`` (turn k arrives
+    ``duration`` after turn k-1 finishes) and ``finish`` (the final turn).
+    Keys are sorted and floats unrounded: the same programs always produce
+    byte-identical files."""
+    lines = []
+    for p in programs:
+        lines.append({"ev": "submit", "pid": p.program_id,
+                      "t": p.arrival_time, "turn": 0,
+                      "shared_prefix_tokens": p.shared_prefix_tokens,
+                      "shared_prefix_id": p.shared_prefix_id,
+                      **_turn_payload(p.turns[0])})
+        for k in range(1, p.num_turns):
+            prev = p.turns[k - 1]
+            lines.append({"ev": "tool_pause", "pid": p.program_id,
+                          "turn": k, "after_tool": prev.tool,
+                          "duration": prev.tool_duration,
+                          **_turn_payload(p.turns[k])})
+        lines.append({"ev": "finish", "pid": p.program_id,
+                      "turn": p.num_turns - 1})
+    pathlib.Path(path).write_text(
+        "\n".join(json.dumps(l, sort_keys=True) for l in lines) + "\n")
+
+
+def load_trace(path) -> list[Program]:
+    """Rebuild the Program list from a trace file."""
+    progs: dict[str, Program] = {}
+    for line in pathlib.Path(path).read_text().splitlines():
+        d = json.loads(line)
+        if d["ev"] == "finish":
+            continue
+        turn = Turn(new_tokens=d["new_tokens"],
+                    output_tokens=d["output_tokens"], tool=d["tool"],
+                    tool_duration=d["tool_duration"],
+                    output_text=d["output_text"])
+        if d["ev"] == "submit":
+            progs[d["pid"]] = Program(
+                program_id=d["pid"], arrival_time=d["t"], turns=[turn],
+                shared_prefix_tokens=d.get("shared_prefix_tokens", 0),
+                shared_prefix_id=d.get("shared_prefix_id"))
+        else:                                   # tool_pause
+            progs[d["pid"]].turns.append(turn)
+    return list(progs.values())
+
+
+# ----------------------------------------------------------- backends
+class ShadowClockBackend:
+    """Physical execution on the logical clock: runs the real backend for
+    its side effects (pages, staging, COW), reports the analytic cost
+    model's step duration — so the logical and physical engines see
+    identical virtual time and must make identical decisions."""
+
+    def __init__(self, inner, cost: CostModel):
+        self.inner = inner
+        self._cost_backend = SimBackend(cost)
+
+    def execute(self, prefill, decode) -> float:
+        self.inner.execute(prefill, decode)
+        return self._cost_backend.execute(prefill, decode)
+
+    def __getattr__(self, name):    # hooks + runtime resolve on the inner
+        return getattr(self.inner, name)
+
+
+# ------------------------------------------------------------ differential
+@dataclasses.dataclass
+class DifferentialReport:
+    matched: bool
+    steps_logical: int
+    steps_physical: int
+    first_divergence: Optional[dict]
+    staging_checks: int = 0
+    staging_failures: int = 0
+    cow_checks: int = 0
+    cow_failures: int = 0
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.matched and self.staging_failures == 0 \
+            and self.cow_failures == 0
+
+    def describe(self) -> str:
+        if self.ok:
+            return (f"MATCH: {self.steps_physical} decision steps identical; "
+                    f"{self.staging_checks} restores and {self.cow_checks} "
+                    f"COW splits bit-exact "
+                    f"(demotions={self.stats.get('demotions')}, "
+                    f"reloads={self.stats.get('offload_reloads')}, "
+                    f"preemptions={self.stats.get('preemptions')}, "
+                    f"prefix_hits={self.stats.get('prefix_hits')})")
+        out = ["DIVERGENCE:"]
+        if not self.matched and self.first_divergence is not None:
+            d = self.first_divergence
+            out.append(f"  first differing step #{d['step']} "
+                       f"(virtual t={d.get('now')}):")
+            out.append(f"    logical : {d.get('logical')}")
+            out.append(f"    physical: {d.get('physical')}")
+        if self.staging_failures:
+            out.append(f"  {self.staging_failures}/{self.staging_checks} "
+                       f"restore round-trips NOT bit-exact")
+        if self.cow_failures:
+            out.append(f"  {self.cow_failures}/{self.cow_checks} "
+                       f"COW splits NOT bit-exact")
+        return "\n".join(out)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+def _clone_programs(programs: list[Program]) -> list[Program]:
+    """Fresh Program/Turn objects per run (requests mutate nothing on the
+    Program, but isolation keeps the two runs honest)."""
+    return [Program(p.program_id, p.arrival_time,
+                    [dataclasses.replace(t) for t in p.turns],
+                    shared_prefix_tokens=p.shared_prefix_tokens,
+                    shared_prefix_id=p.shared_prefix_id)
+            for p in programs]
+
+
+def run_engine(programs: list[Program], rc: ReplayConfig,
+               physical: bool, on_step=None) -> tuple[list, Engine]:
+    """One replay leg. Returns (decision log, engine); the log is a list
+    of ``{"now": t, "events": [decision tuples]}`` records, one per
+    engine step that made at least one decision."""
+    cfg = get_config(rc.arch, smoke=True)
+    prof = build_profile(cfg, 1)
+    hw = rc.hardware()
+    cost = CostModel(prof, hw)
+    block_bytes = rc.block_size * prof.kv_bytes_per_token
+    backend = None
+    if physical:
+        # local import: keeps the logical-only path importable without jax
+        from repro.serving.backend import JaxModelBackend
+        import jax
+        inner = JaxModelBackend(cfg, rng=jax.random.PRNGKey(0),
+                                max_len=rc.max_len,
+                                page_size=rc.block_size)
+        inner.runtime.verify_copies = True
+        inner.verify_staging = True
+        backend = ShadowClockBackend(inner, cost)
+    eng = Engine(cfg, rc.engine_config(block_bytes), hw,
+                 backend=backend, cost=cost)
+    log: list = []
+
+    def _capture(e, ev, now):
+        if ev.decisions:
+            log.append({"now": round(now, 9),
+                        "events": [tuple(d) for d in ev.decisions]})
+        if on_step is not None:
+            on_step(e, ev, now)
+
+    programs = _clone_programs(programs)
+    router = Router([eng])
+    router.register_programs(programs)
+    sim = Simulator([eng], router, max_seconds=rc.max_seconds,
+                    on_step=_capture)
+    sim.add_programs(programs)
+    sim.run()
+    return log, eng
+
+
+def _first_divergence(log_a: list, log_b: list) -> Optional[dict]:
+    for i, (ra, rb) in enumerate(zip(log_a, log_b)):
+        if ra != rb:
+            return {"step": i, "now": ra["now"], "logical": ra["events"],
+                    "physical": rb["events"]}
+    if len(log_a) != len(log_b):
+        i = min(len(log_a), len(log_b))
+        longer = log_a[i] if len(log_a) > len(log_b) else log_b[i]
+        return {"step": i, "now": longer["now"],
+                "logical": log_a[i]["events"] if i < len(log_a) else None,
+                "physical": log_b[i]["events"] if i < len(log_b) else None}
+    return None
+
+
+def run_differential(programs: list[Program],
+                     rc: ReplayConfig = ReplayConfig()) -> DifferentialReport:
+    """Execute `programs` through the logical and the physical stack and
+    compare decision streams + physical bit-exactness."""
+    log_l, _ = run_engine(programs, rc, physical=False)
+    log_p, eng_p = run_engine(programs, rc, physical=True)
+    div = _first_divergence(log_l, log_p)
+    backend = eng_p.backend.inner
+    st = eng_p.scheduler.stats
+    return DifferentialReport(
+        matched=div is None,
+        steps_logical=len(log_l), steps_physical=len(log_p),
+        first_divergence=div,
+        staging_checks=len(backend.staging_checks),
+        staging_failures=sum(1 for _, ok in backend.staging_checks
+                             if not ok),
+        cow_checks=len(backend.runtime.copy_checks),
+        cow_failures=sum(1 for ok in backend.runtime.copy_checks if not ok),
+        stats={"demotions": st.demotions,
+               "offload_reloads": st.offload_reloads,
+               "preemptions": st.preemptions,
+               "prefix_hits": st.prefix_hits,
+               "ttl_hits": st.ttl_hits,
+               "ttl_expiries": st.ttl_expiries,
+               "cow_splits": backend.runtime.cow_splits,
+               "restores": backend.restores,
+               "demotions_physical": backend.demotions,
+               "shortfall_tokens": backend.shortfall_tokens})
+
+
+# ----------------------------------------------------------------- CLI
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="differential logical-vs-physical replay gate")
+    ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
+    ap.add_argument("--programs", type=int, default=6)
+    ap.add_argument("--out", type=str, default="experiments/replay")
+    args = ap.parse_args(argv)
+    out = pathlib.Path(args.out)
+    out.mkdir(parents=True, exist_ok=True)
+    failed = False
+    for seed in args.seeds:
+        trace = out / f"trace_seed{seed}.jsonl"
+        record_trace(seeded_programs(seed, n=args.programs), trace)
+        report = run_differential(load_trace(trace))
+        (out / f"verdict_seed{seed}.json").write_text(
+            json.dumps(report.to_json(), indent=2, default=str))
+        print(f"seed {seed}: {report.describe()}")
+        failed |= not report.ok
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -32,7 +32,7 @@ class Simulator:
     granularity)."""
 
     def __init__(self, engines: list[Engine], router: Optional[Router] = None,
-                 max_seconds: float = 36000.0):
+                 max_seconds: float = 36000.0, on_step=None):
         self.engines = engines
         self.router = router or Router(engines)
         self.max_seconds = max_seconds
@@ -40,6 +40,10 @@ class Simulator:
         self._seq = 0
         self.now = 0.0
         self._engine_ready = {e.engine_id: 0.0 for e in engines}
+        # called as on_step(engine, StepEvents, now) after every non-idle
+        # engine step — replay/decision-log capture and per-step invariant
+        # checking (the differential harness and the fuzz suites)
+        self.on_step = on_step
 
     def add_programs(self, programs: list[Program]) -> None:
         for p in programs:
@@ -75,6 +79,8 @@ class Simulator:
                 end = self.now + ev.duration
                 self._engine_ready[e.engine_id] = end
                 self._handle_events(e, ev, end)
+                if self.on_step is not None:
+                    self.on_step(e, ev, self.now)
             # advance to the earliest ready engine or next arrival
             cands = [t for t in self._engine_ready.values() if t > self.now]
             if self.events:

@@ -49,6 +49,11 @@ class WorkloadSpec:
     output_frac: float = 0.15         # share of per-turn tokens generated
     max_context: int = 131072
     tools: tuple = ()                 # (name, weight, scale, sigma)
+    # floors (defaults match the paper-scale traces; smoke workloads for
+    # real-model replay shrink them so CPU runs stay fast)
+    min_turn_tokens: int = 64
+    min_output_tokens: int = 16
+    min_new_tokens: int = 16
 
 
 SWE_BENCH = WorkloadSpec(
@@ -92,7 +97,9 @@ def _lognormal_params(mean: float, sigma_ln: float) -> tuple[float, float]:
 def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
                       seed: int = 0, turn_scale: float = 1.0,
                       share_ratio: float = 0.0,
-                      prefix_groups: int = 1) -> list[Program]:
+                      prefix_groups: int = 1,
+                      partial_prefix_drop: float = 0.0,
+                      burst_scale: float = 4.0) -> list[Program]:
     """Poisson arrivals at `rate_jps`; `turn_scale` replays the paper's
     Fig. 14 experiment (more turns, inversely scaled token lengths).
 
@@ -100,7 +107,16 @@ def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
     tool schemas) of ``share_ratio * spec.tokens_mean`` tokens to every
     program's first turn; programs are assigned round-robin to
     `prefix_groups` distinct preamble contents (1 = one fleet-wide agent
-    template)."""
+    template).
+
+    `partial_prefix_drop` > 0 gives that fraction of programs one
+    mid-program *context burst* turn (``burst_scale`` × its normal
+    new-token count — an agent pasting a huge tool output). Their
+    offload-tier entries are then oversized relative to the fleet, so
+    under DRAM/SSD pressure the tiered store sheds their *suffix* blocks
+    (:meth:`TieredKVStore._demote_lru`) — the workload knob that actually
+    exercises partial-prefix adoption (the next turn adopts the shrunk
+    usable prefix and recomputes only the uncovered suffix)."""
     rng = np.random.default_rng(seed)
     shared_tokens = int(max(0.0, share_ratio) * spec.tokens_mean)
     t = 0.0
@@ -119,9 +135,9 @@ def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
         for k in range(n_turns):
             # later turns tend to be shorter (Fig. 3: approaching completion)
             frac = 1.25 - 0.5 * (k / max(n_turns - 1, 1))
-            tok = max(64, int(per_turn * frac))
-            out_tok = max(16, int(tok * spec.output_frac))
-            new_tok = max(16, tok - out_tok)
+            tok = max(spec.min_turn_tokens, int(per_turn * frac))
+            out_tok = max(spec.min_output_tokens, int(tok * spec.output_frac))
+            new_tok = max(spec.min_new_tokens, tok - out_tok)
             if k == n_turns - 1:
                 tool, dur = None, 0.0
             else:
@@ -133,6 +149,14 @@ def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
             text = f"```bash\n{tool} arg{k}\n```" if tool else "Final answer."
             turns.append(Turn(new_tokens=new_tok, output_tokens=out_tok,
                               tool=tool, tool_duration=dur, output_text=text))
+        if partial_prefix_drop > 0 and n_turns >= 3 \
+                and rng.random() < partial_prefix_drop:
+            # context burst on one mid-program turn (never the first or
+            # last): the program's offloaded KV becomes oversized and
+            # sheds suffix blocks under tier pressure
+            k = int(rng.integers(1, n_turns - 1))
+            turns[k].new_tokens = min(int(turns[k].new_tokens * burst_scale),
+                                      int(spec.max_context * 0.8))
         prefix_id = None
         if shared_tokens:
             # the preamble is extra context on top of the program's own work

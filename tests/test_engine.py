@@ -77,6 +77,37 @@ class TestEndToEnd:
         assert s1.avg_jct > s0.avg_jct
 
 
+class TestPreemptMidPrefillVictim:
+    """Regression: a preemption victim picked during decode block growth
+    that is still mid-prefill must leave the step's prefill batch too —
+    executing its stale chunk would advance a PREEMPTED request (and
+    re-create backend state the preemption just released)."""
+
+    def test_prefill_victim_removed_from_batch(self):
+        from repro.core.types import Request, RequestState
+        cfg = get_config("qwen2-1.5b")
+        ecfg = EngineConfig(policy="vllm", max_batch=4, chunk_size=64,
+                            kv_budget_bytes=1.0)     # floors at 64 blocks
+        eng = Engine(cfg, ecfg, HardwareProfile())
+        # A: prompt 63 -> prefill completes step 1, first decode growth
+        # lands exactly on a block boundary (pos 63+1=64) at step 2
+        a = Request("A", 0, 63, 32, 0.0, 0.0)
+        # B: long prompt, gets only the leftover 1-token chunk in step 1,
+        # so it is mid-prefill when the OOM hits
+        b = Request("B", 0, 320, 16, 0.0, 0.1)
+        eng.submit(a, 0.0)
+        eng.submit(b, 0.0)
+        ev1 = eng.step(0.0)
+        assert len(ev1.admitted) == 2 and 0 < b.prefill_pos < b.prompt_len
+        eng.blocks.allocate(999999, eng.blocks.free)  # drain the pool
+        eng.step(ev1.duration)                        # A's growth preempts B
+        assert b.state is RequestState.PREEMPTED
+        assert b.prefill_pos == 0                     # stale chunk NOT run
+        assert b in eng.scheduler.waiting and b not in eng.running
+        eng.blocks.free_request(999999)
+        eng.blocks.check()
+
+
 class TestTTLDynamics:
     def test_hits_accumulate_over_turns(self):
         s, eng = run("continuum", n=25, rate=0.05)

@@ -54,12 +54,31 @@ class TestDemoteLRU:
         assert all(m.entries[p].tier == "ssd" for p in ("a", "b", "c"))
         assert m.dram_used == 95.0 and m.ssd_used == 90.0
 
-    def test_ssd_full_drops_entry(self):
+    def test_ssd_full_sheds_suffix_keeps_prefix(self):
+        """SSD can't take the whole victim: the entry survives shrunk —
+        its suffix blocks are dropped and the longest contiguous prefix
+        SSD can hold is demoted (a shrunk entry still serves the next
+        turn's leading tokens; dropping it all would serve nothing)."""
         m = make_store(dram=50.0, ssd=40.0)
         m.offload("a", tokens=10, nbytes=45.0)
-        m.offload("b", tokens=10, nbytes=45.0)       # a: 45 > ssd 40 -> drop
-        assert "a" not in m.entries
-        assert m.ssd_used == 0.0
+        m.offload("b", tokens=10, nbytes=45.0)       # a: 45 > ssd 40
+        e = m.entries["a"]
+        assert e.tier == "ssd" and e.blocks == 40    # 5 suffix blocks shed
+        assert e.blocks_total == 45
+        assert e.tokens == 10 * 40 // 45             # usable prefix shrank
+        assert m.ssd_used == 40.0
+        assert m.store.stats.dropped_blocks == 5
+        m.store.check()
+
+    def test_nothing_survives_drops_entry(self):
+        """Zero SSD room shrinks the survivable prefix to zero: only then
+        is the whole entry dropped."""
+        m = make_store(dram=50.0, ssd=40.0)
+        m.offload("a", tokens=10, nbytes=45.0)
+        m.offload("filler", tokens=10, nbytes=40.0)  # a -> ssd (40 blocks)
+        m.offload("b", tokens=10, nbytes=45.0)       # filler: ssd full -> gone
+        assert "filler" not in m.entries
+        m.store.check()
 
     def test_reload_seconds_uses_tier_bandwidth(self):
         m = make_store(dram=100.0, ssd=1000.0)
@@ -138,6 +157,50 @@ class TestFinalTurnOffload:
         r.generated = r.output_len
         s.on_request_finish(r, 1.0)                  # vllm: no pin -> offload
         assert off.lookup("p0") is not None
+
+
+class TestPartialPrefixAdoption:
+    """ROADMAP follow-up (b): an offload entry whose suffix blocks were
+    shed under tier pressure is adopted *partially* — admission charges
+    compute for exactly the uncovered suffix."""
+
+    def _sched(self, dram=10.0, ssd=6.0):
+        handler = ToolCallHandler(TTLModel(TTLConfig()),
+                                  prefill_reload_fn=lambda r: 5.0)
+        blocks = BlockManager(BlockConfig(1000, 16))
+        off = OffloadManager(OffloadConfig(dram_bytes=dram, ssd_bytes=ssd,
+                                           h2d_bw=10.0, ssd_bw=2.0))
+        s = Scheduler(make_policy("vllm"), handler, blocks, offload=off)
+        s._kv_bytes_per_token = 1.0 / 16.0    # 1 block = 16 tokens = 1 byte
+        return s, off
+
+    def test_adoption_charges_exactly_uncovered_suffix(self):
+        s, off = self._sched(dram=10.0, ssd=6.0)
+        # program p offloaded 160 tokens = 10 blocks; pressure from q
+        # sheds 4 suffix blocks (ssd takes 6): usable prefix = 96 tokens
+        off.offload("p", tokens=160, nbytes=10.0)
+        off.offload("q", tokens=160, nbytes=10.0)
+        e = off.lookup("p")
+        assert e.blocks == 6 and e.tokens == 96
+        r = Request("p", 1, 200, 16, 0.0, 0.0, tool="ls",
+                    output_text="```bash\nls\n```")
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 1e6)                 # transfer queues drained
+        # cached covers exactly the surviving prefix; the engine prefills
+        # (and pays compute for) exactly the 104 uncovered suffix tokens
+        assert r.cached_prefix == 96
+        assert r.prompt_len - r.cached_prefix == 104
+        assert r.reload_seconds > 0.0          # the prefix is still a reload
+        off.store.check()
+
+    def test_full_entry_adoption_caps_at_prompt_minus_one(self):
+        s, off = self._sched(dram=100.0, ssd=0.0)
+        off.offload("p", tokens=160, nbytes=10.0)
+        r = Request("p", 1, 160, 16, 0.0, 0.0, tool="ls",
+                    output_text="```bash\nls\n```")
+        s.on_request_arrive(r, 0.0)
+        assert s.admit(r, 1e6)
+        assert r.cached_prefix == 159          # last token always recomputed
 
 
 class TestSolveParallel:

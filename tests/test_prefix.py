@@ -224,7 +224,9 @@ class TestSchedulerIntegration:
         s.on_request_arrive(nxt, 2.0)
         assert s.admit(nxt, 2.0)
         assert nxt.served_from_pin and not nxt.served_from_shared
-        assert nxt.cached_prefix == 176              # pin covers generated too
+        # pin covers the generated tokens too, minus the final sampled
+        # token whose KV was never appended (materialized_tokens)
+        assert nxt.cached_prefix == 175
 
     def test_pinned_program_prefix_nodes_survive_pressure(self):
         """TTL-pinned programs' radix nodes are pin-protected: memory

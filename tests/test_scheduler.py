@@ -87,7 +87,9 @@ class TestPinLifecycle:
         nxt = req(turn=1, prompt=160 + 16 + 32, arr=2.0)
         s.on_request_arrive(nxt, 2.0)
         assert s.admit(nxt, 2.0)
-        assert nxt.served_from_pin and nxt.cached_prefix == 176
+        # 160 prompt + 16 generated, minus the final sampled token whose
+        # KV was never appended (it is this next turn's first input)
+        assert nxt.served_from_pin and nxt.cached_prefix == 175
         assert s.stats.ttl_hits == 1
 
     def test_deadlock_prevention_unpins_latest(self):

@@ -61,6 +61,60 @@ class TestWorkloadStats:
         assert parser.parse(p.turns[-1].output_text) is None
 
 
+class TestPartialPrefixDropKnob:
+    def test_bursts_inflate_mid_program_turns(self):
+        """With the knob on, most programs' largest turn is an *interior*
+        one (the burst); without it, the first turn dominates (the 1.25
+        front-loading in the generator)."""
+        def interior_max_frac(ps):
+            hits = total = 0
+            for p in ps:
+                if p.num_turns < 3:
+                    continue
+                total += 1
+                toks = [t.new_tokens for t in p.turns]
+                if 0 < toks.index(max(toks)) < p.num_turns - 1:
+                    hits += 1
+            return hits / max(total, 1)
+
+        base = generate_programs(SWE_BENCH, n=150, rate_jps=1.0, seed=7)
+        burst = generate_programs(SWE_BENCH, n=150, rate_jps=1.0, seed=7,
+                                  partial_prefix_drop=1.0, burst_scale=4.0)
+        assert interior_max_frac(base) < 0.2
+        assert interior_max_frac(burst) > 0.8
+        # and the fleet's KV footprint grows accordingly
+        mean = lambda ps: sum(p.total_tokens() for p in ps) / len(ps)
+        assert mean(burst) > 1.1 * mean(base)
+
+    def test_knob_off_is_bit_identical(self):
+        a = generate_programs(SWE_BENCH, n=50, rate_jps=1.0, seed=8)
+        b = generate_programs(SWE_BENCH, n=50, rate_jps=1.0, seed=8,
+                              partial_prefix_drop=0.0)
+        for pa, pb in zip(a, b):
+            assert [t.new_tokens for t in pa.turns] == \
+                [t.new_tokens for t in pb.turns]
+
+    def test_bursty_fleet_sheds_suffix_blocks_under_tier_pressure(self):
+        """End to end: the knob's oversized entries overflow a store sized
+        for the normal fleet, and the store responds with partial suffix
+        drops (shrunk entries), not outright drops only."""
+        from repro.serving.kvstore import KVStoreConfig, TieredKVStore
+        ps = generate_programs(SWE_BENCH, n=40, rate_jps=1.0, seed=9,
+                               partial_prefix_drop=0.6, burst_scale=6.0)
+        sizes = sorted(p.total_tokens() for p in ps)
+        store = TieredKVStore(KVStoreConfig(
+            dram_bytes=4 * sizes[len(sizes) // 2], ssd_bytes=sizes[-1],
+            block_bytes=1024.0))
+        for i, p in enumerate(ps):
+            store.put(p.program_id, p.total_tokens(), float(p.total_tokens()),
+                      now=float(i))
+            store.check()
+        shrunk = [e for e in store.entries.values()
+                  if 0 < e.blocks < e.blocks_total]
+        assert shrunk, "no partial suffix drops were exercised"
+        assert store.stats.dropped_blocks > 0
+
+
 class TestTraceIO:
     def test_roundtrip(self, tmp_path):
         ps = generate_programs(BFCL, n=5, rate_jps=1.0, seed=6)

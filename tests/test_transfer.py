@@ -1,0 +1,107 @@
+"""TransferEngine bandwidth curves: piecewise-linear message-size-
+dependent channels (ROADMAP follow-up (c)) — monotonicity, constant-curve
+equivalence, peek-vs-commit agreement, and store plumbing."""
+import pytest
+
+from repro.serving.kvstore import (BandwidthCurve, Channel, KVStoreConfig,
+                                   TieredKVStore, TransferEngine,
+                                   resolve_bandwidth)
+
+# a PCIe-like calibration: small messages achieve a fraction of peak
+PCIE_LIKE = BandwidthCurve.from_points(
+    [(64e3, 2e9), (1e6, 8e9), (16e6, 20e9), (256e6, 25e9)])
+
+
+class TestBandwidthCurve:
+    def test_transfer_seconds_monotone_in_message_size(self):
+        sizes = [2 ** k for k in range(10, 31)]
+        secs = [PCIE_LIKE.seconds(s) for s in sizes]
+        assert all(b >= a for a, b in zip(secs, secs[1:]))
+        # strictly increasing away from ties
+        assert secs[-1] > secs[0] > 0
+
+    def test_effective_bandwidth_rises_with_size(self):
+        assert PCIE_LIKE.bandwidth(64e3) == pytest.approx(2e9)
+        assert PCIE_LIKE.bandwidth(256e6) == pytest.approx(25e9)
+        assert PCIE_LIKE.bandwidth(1e6) > PCIE_LIKE.bandwidth(64e3)
+
+    def test_extrapolation_uses_end_bandwidths(self):
+        # beyond the last knot: marginal bytes at peak bw
+        t_last = 256e6 / 25e9
+        assert PCIE_LIKE.seconds(512e6) == \
+            pytest.approx(t_last + 256e6 / 25e9)
+        # below the first knot: the small-message bandwidth
+        assert PCIE_LIKE.seconds(32e3) == pytest.approx(32e3 / 2e9)
+
+    def test_impossible_calibration_rejected(self):
+        # 10 MB in 1 ms but 100 MB in 0.5 ms: larger finishes sooner
+        with pytest.raises(ValueError):
+            BandwidthCurve.from_points([(10e6, 1e10), (100e6, 2e11)])
+        with pytest.raises(ValueError):
+            BandwidthCurve((2e6, 1e6), (1e9, 1e9))   # sizes not ascending
+
+    def test_resolve_bandwidth(self):
+        assert resolve_bandwidth(None, 25e9) == 25e9
+        curve = resolve_bandwidth([(1e6, 1e9), (1e8, 2e9)], 25e9)
+        assert isinstance(curve, BandwidthCurve)
+
+
+class TestCurvedChannel:
+    def test_constant_channel_unchanged(self):
+        c = Channel("h2d", 10.0, latency=0.5)
+        assert c.seconds(20.0) == pytest.approx(0.5 + 2.0)
+        t = c.submit(20.0, now=1.0)
+        assert (t.start, t.end) == (1.0, pytest.approx(3.5))
+
+    def test_curved_channel_prices_by_size(self):
+        c = Channel("h2d", PCIE_LIKE)
+        assert c.bw == pytest.approx(25e9)           # nominal peak kept
+        small, big = c.seconds(64e3), c.seconds(256e6)
+        assert small == pytest.approx(64e3 / 2e9)
+        assert big == pytest.approx(256e6 / 25e9)
+        # the queue uses the same size-dependent pricing
+        t1 = c.submit(64e3, now=0.0)
+        t2 = c.submit(64e3, now=0.0)                 # queues behind t1
+        assert t2.start == pytest.approx(t1.end)
+        assert t2.seconds == pytest.approx(small)
+
+
+class TestPeekVsCommit:
+    def _engine(self):
+        return TransferEngine(PCIE_LIKE, PCIE_LIKE,
+                              BandwidthCurve.from_points([(1e6, 1e9),
+                                                          (1e8, 3e9)]),
+                              1.5e9, latency=1e-4)
+
+    def test_reload_eta_peek_equals_commit(self):
+        for dram, ssd in [(5e6, 0.0), (0.0, 7e6), (3e6, 9e6)]:
+            te = self._engine()
+            # in-flight traffic so queues are non-trivial
+            te.write_dram(2e6, now=0.0)
+            te.read_ssd(4e6, now=0.0)
+            peek = te.reload_eta(dram, ssd, now=0.1, dram_ready=0.05,
+                                 ssd_ready=0.2)
+            commit = te.reload_eta(dram, ssd, now=0.1, dram_ready=0.05,
+                                   ssd_ready=0.2, commit=True)
+            assert commit == pytest.approx(peek), (dram, ssd)
+
+    def test_commit_occupies_channels_peek_does_not(self):
+        te = self._engine()
+        before = te.h2d.busy_until
+        te.reload_eta(5e6, 0.0, now=0.0)
+        assert te.h2d.busy_until == before           # peek: no commitment
+        te.reload_eta(5e6, 0.0, now=0.0, commit=True)
+        assert te.h2d.busy_until > before
+
+
+class TestStorePlumbing:
+    def test_store_config_builds_curved_channels(self):
+        cfg = KVStoreConfig(dram_bytes=1e9, block_bytes=1e6,
+                            h2d_curve=((1e6, 1e9), (1e8, 20e9)))
+        store = TieredKVStore(cfg)
+        assert store.transfer.h2d.curve is not None
+        assert store.transfer.d2h.curve is None      # constant default
+        # reload pricing reflects the message-size-dependent time
+        store.put("p", tokens=10, nbytes=1e6, now=0.0)
+        secs = store.reload_seconds("p", now=1e3)    # drained queues
+        assert secs == pytest.approx(1e6 / 1e9)
