@@ -9,17 +9,18 @@ import time
 
 def main() -> None:
     quick = "--full" not in sys.argv
-    from benchmarks import (bench_ablation, bench_distributed, bench_e2e,
-                            bench_kvstore, bench_memoryfulness,
-                            bench_offload, bench_overhead,
-                            bench_prefix_sharing, bench_roofline,
-                            bench_rollout, bench_sensitivity, bench_tail,
-                            bench_turns)
+    from benchmarks import (bench_ablation, bench_cluster,
+                            bench_distributed, bench_e2e, bench_kvstore,
+                            bench_memoryfulness, bench_offload,
+                            bench_overhead, bench_prefix_sharing,
+                            bench_roofline, bench_rollout,
+                            bench_sensitivity, bench_tail, bench_turns)
     benches = [
         ("fig8_e2e", bench_e2e.run),
         ("prefix_sharing", bench_prefix_sharing.run),
         ("fig10_offload", bench_offload.run),
         ("kvstore", bench_kvstore.run),
+        ("cluster", bench_cluster.run),
         ("fig11_tail", bench_tail.run),
         ("fig12_distributed", bench_distributed.run),
         ("fig13_sensitivity", bench_sensitivity.run),

@@ -193,6 +193,31 @@ class Scheduler:
             self.prefix_index.release(req.prefix_node)
         req.prefix_node = None
 
+    # -------------------------------------------------- cross-replica moves
+    def migrate_out(self, program_id: str, now: float,
+                    keep_copy: bool = True) -> int:
+        """Release ``program_id``'s pinned HBM KV because it is leaving
+        this replica (cluster migration / cold re-home) — the blocks are
+        freed WITHOUT a home-tier demotion: the KV departs on a peer link
+        (``keep_copy=True``; the backend stages a host copy for the
+        flight) or is genuinely dropped (``keep_copy=False``, the
+        recompute-elsewhere decision). Returns the pinned token count
+        (0 = no pin held here)."""
+        e = self.pinned.pop(program_id, None)
+        if e is None:
+            return 0
+        self.blocks.unpin_free(program_id)
+        if self.prefix_index is not None and e.prefix_node is not None:
+            self.prefix_index.release(e.prefix_node)
+            e.prefix_node = None
+        self._log("migrate_out" if keep_copy else "rehome_drop", program_id,
+                  e.tokens)
+        if keep_copy and self.on_demote is not None:
+            self.on_demote(program_id)
+        elif self.on_evict is not None:
+            self.on_evict(program_id)
+        return e.tokens
+
     # engine wires this (depends on model config)
     _kv_bytes_per_token: float = 0.0
 
@@ -261,6 +286,17 @@ class Scheduler:
         return min(entry.tokens, max(req.prompt_len - 1, 0)) \
             if entry is not None else 0
 
+    def _footprint_tokens(self, req: Request) -> int:
+        """Token positions the admitted request's KV will occupy before
+        decode growth takes over: the prompt, plus — for a request
+        resuming after a mid-decode preemption — the tokens it already
+        generated (decode growth only extends at *future* block
+        boundaries, so under-charging here would let the pool overcommit
+        by ``generated/block_size`` blocks per resumed request; the
+        deficit used to surface as publication transferring more blocks
+        into the shared pool than the request owned)."""
+        return req.prompt_len + req.generated
+
     def _admit_need(self, req: Request, now: float = 0.0) -> int:
         """Blocks `admit` would reserve for `req` (for deadlock sizing).
         Mirrors admit()'s source selection exactly: an offload win charges
@@ -268,12 +304,13 @@ class Scheduler:
         pin_t = self._pin_tokens(req)
         radix_t = self._radix_tokens(req)
         off_t = self._offload_tokens(req, now)
+        footprint = self._footprint_tokens(req)
         if pin_t >= max(radix_t, off_t) and pin_t > 0:
-            need = self.blocks.blocks_for_tokens(req.prompt_len - pin_t)
+            need = self.blocks.blocks_for_tokens(footprint - pin_t)
             return max(0, need - self.blocks.cfg.state_blocks)
         if radix_t >= off_t and radix_t > 0:
-            return self.blocks.blocks_for_tokens(req.prompt_len - radix_t)
-        return self.blocks.blocks_for_tokens(req.prompt_len)
+            return self.blocks.blocks_for_tokens(footprint - radix_t)
+        return self.blocks.blocks_for_tokens(footprint)
 
     def admit(self, req: Request, now: float) -> bool:
         """Try to place `req`'s KV footprint; True if admitted. Cached
@@ -307,8 +344,11 @@ class Scheduler:
         # vLLM semantics: reserve prompt blocks at admission; decode growth
         # goes through extend() with preemption on pressure. An offloaded
         # prefix still needs its blocks — the KV is reloaded into them.
+        # The footprint includes tokens a resumed request already
+        # generated (see _footprint_tokens).
         charge = 0 if source == "offload" else cached
-        need = self.blocks.blocks_for_tokens(req.prompt_len - charge)
+        need = self.blocks.blocks_for_tokens(
+            self._footprint_tokens(req) - charge)
         if source == "pin":
             need = max(0, need - self.blocks.cfg.state_blocks)  # state resident
         if not self.blocks.can_allocate(need):

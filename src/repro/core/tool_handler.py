@@ -91,6 +91,9 @@ class ToolCallHandler:
         self.parser = parser or ToolCallParser()
         # PrefillReload(r): seconds to reconstruct r's KV (profiler-backed)
         self.prefill_reload_fn = prefill_reload_fn or (lambda r: 0.0)
+        # live per-replica queueing-delay ETA (cluster serving wires this to
+        # Engine.queue_eta); None = the TTL model's fleet-average T̄
+        self.queue_eta_fn: Optional[Callable[[], float]] = None
         self._pending: dict[str, _PendingTool] = {}     # program_id -> tool
         self.seen_programs: set[str] = set()
 
@@ -128,13 +131,14 @@ class ToolCallHandler:
 
     def set_up_ttl(self, req: Request, tool: str) -> TTLDecision:
         reload = self.prefill_reload_fn(req)
+        queue_eta = self.queue_eta_fn() if self.queue_eta_fn else None
         if req.parallel_tools and \
                 self.ttl_model.records.count(tool) <= self.ttl_model.cfg.cold_start_k:
             # joint barrier CDF not yet warm: independence product of the
             # individual tools' CDFs (paper Appendix C.1)
             names = [n for n, _ in req.parallel_tools]
-            return self.ttl_model.solve_parallel(names, reload)
-        return self.ttl_model.solve(tool, reload)
+            return self.ttl_model.solve_parallel(names, reload, queue_eta)
+        return self.ttl_model.solve(tool, reload, queue_eta)
 
     # ----------------------------------------------------------- lifecycle
     def on_program_finish(self, program_id: str, num_turns: int) -> None:

@@ -165,14 +165,24 @@ class TTLModel:
         self.eta_est.observe_program(num_turns)
 
     # ---- the solver ------------------------------------------------------
-    def _gain_term(self, prefill_reload: float) -> float:
-        """G = T̄·η + PrefillReload(r) (seconds)."""
-        return self.t_bar.mean * self.eta_est.eta + max(0.0, prefill_reload)
+    def _gain_term(self, prefill_reload: float,
+                   queue_eta: Optional[float] = None) -> float:
+        """G = T̄·η + PrefillReload(r) (seconds).
 
-    def solve(self, tool: Optional[str], prefill_reload: float) -> TTLDecision:
+        ``queue_eta`` — a live per-replica queueing-delay estimate (the
+        engine's outstanding-work ETA) — replaces the fleet-average T̄ when
+        provided: in a multi-replica cluster the out-of-order cost a TTL
+        miss pays is the *local* queue the returning program would rejoin,
+        not the historical average across the fleet."""
+        delay = self.t_bar.mean if queue_eta is None else max(0.0, queue_eta)
+        return delay * self.eta_est.eta + max(0.0, prefill_reload)
+
+    def solve(self, tool: Optional[str], prefill_reload: float,
+              queue_eta: Optional[float] = None) -> TTLDecision:
         cfg = self.cfg
-        G = self._gain_term(prefill_reload)
-        eta, tb = self.eta_est.eta, self.t_bar.mean
+        G = self._gain_term(prefill_reload, queue_eta)
+        eta = self.eta_est.eta
+        tb = self.t_bar.mean if queue_eta is None else max(0.0, queue_eta)
 
         n_global = self.records.count(None)
         n_tool = self.records.count(tool) if tool else 0
@@ -215,17 +225,18 @@ class TTLModel:
         return u * math.log(G / u)
 
     # ---- parallel tool calls (paper Appendix C.1) -------------------------
-    def solve_parallel(self, tools: list[str],
-                       prefill_reload: float) -> TTLDecision:
+    def solve_parallel(self, tools: list[str], prefill_reload: float,
+                       queue_eta: Optional[float] = None) -> TTLDecision:
         """TTL for a turn that fans out several tools and resumes when ALL
         return: the finish-within-τ probability is the product of the
         per-tool empirical CDFs (independent tools; the gap is the max of
         the durations). Candidates: union of all tools' recorded durations.
         """
         if len(tools) <= 1:
-            return self.solve(tools[0] if tools else None, prefill_reload)
+            return self.solve(tools[0] if tools else None, prefill_reload,
+                              queue_eta)
         cfg = self.cfg
-        G = self._gain_term(prefill_reload)
+        G = self._gain_term(prefill_reload, queue_eta)
         if self.records.count(None) <= cfg.cold_start_k:
             ttl = self._cold_start_ttl(G)
             return TTLDecision(min(ttl, cfg.max_ttl), 0.0, "cold_start",

@@ -111,6 +111,19 @@ class JaxModelBackend:
             if self.prefix_index.evict(max(need, 4)) <= 0:
                 return
 
+    def drop_prefix_chain(self, hashes: tuple, keep_blocks: int) -> int:
+        """Scheduler accounting-index eviction propagated to the
+        page-stamped mirror: drop the same hash chain (beyond
+        ``keep_blocks``) so the two radix trees cannot drift apart — the
+        mirror would otherwise hold physical pages for paths accounting
+        already freed, and later page-pool pressure would evict *different*
+        paths the scheduler still serves (the ``shortfall_tokens``
+        defensive recomputes). The mirror's ``on_evict_node`` derefs the
+        dropped nodes' physical pages."""
+        if self.prefix_index is None:
+            return 0
+        return self.prefix_index.evict_chain(hashes, keep_blocks)
+
     # ------------------------------------------------------ token streams
     def _stream(self, name: str) -> jax.Array:
         """Deterministic token ids for a content stream, one id per

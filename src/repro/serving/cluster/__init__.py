@@ -1,0 +1,12 @@
+"""Multi-replica cluster serving: KV-aware routing + cross-replica KV
+migration over the TransferEngine's peer channels."""
+from repro.serving.cluster.clock import ClusterClock
+from repro.serving.cluster.cluster import (Cluster, ClusterConfig,
+                                           ClusterSimulator, ClusterStats,
+                                           build_cluster)
+from repro.serving.cluster.peer import Migration, PeerLink
+from repro.serving.cluster.router import ClusterRouter
+
+__all__ = ["Cluster", "ClusterClock", "ClusterConfig", "ClusterRouter",
+           "ClusterSimulator", "ClusterStats", "Migration", "PeerLink",
+           "build_cluster"]

@@ -1,0 +1,366 @@
+"""Multi-replica cluster serving: N full engines, one virtual clock,
+KV-aware routing and cross-replica KV migration.
+
+Each replica is a complete :class:`~repro.serving.engine.Engine` (own
+``Scheduler``/``BlockManager``/``TieredKVStore``/backend) stepped on the
+shared :class:`~repro.serving.cluster.clock.ClusterClock`. The
+:class:`~repro.serving.cluster.router.ClusterRouter` places every
+arriving turn; when the TTL cost model says shipping the KV beats both
+re-queueing at home and recomputing cold, the cluster **migrates** it:
+
+1. the source releases the KV without a home-tier demotion
+   (``Scheduler.migrate_out`` for pins — the HBM->host staging is a real
+   d2h transfer — or ``TieredKVStore.extract`` for tier entries, whose
+   SSD suffix is first read up to DRAM);
+2. the bytes cross the :class:`~repro.serving.cluster.peer.PeerLink`
+   (two serial NIC hops, queue-aware, BandwidthCurve-priced);
+3. the target's store lands the entry (``admit_migrated``) stamped
+   reloadable at the interconnect arrival time and *pinned* until then,
+   so tier pressure cannot drop KV that is still on the wire;
+4. the target's admission later reloads it through its own h2d channel —
+   the arrival stamp makes the reload ETA include any remaining flight
+   time, so the engine's reload-overlap machinery prices the migration
+   end to end with zero new code paths.
+
+Conservation invariant (``check``): at every step boundary, every
+program's KV is resident on **exactly one replica** (HBM pin / running
+request / tier entry — engine and store on the same replica count once)
+**or in flight on exactly one PeerLink**; per-replica
+``BlockManager.check`` / ``TieredKVStore.check`` / (physical backends)
+``PagedKVRuntime.check`` all hold.
+
+Program-level FCFS stays global: every replica's scheduler orders its
+queue by the cluster-wide ``program_arrival_time``, so placement decides
+*where* a program runs, never *when relative to other programs*.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+from repro.serving.cluster.clock import ClusterClock
+from repro.serving.cluster.peer import PeerLink
+from repro.serving.cluster.router import ClusterRouter
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.metrics import Summary
+from repro.serving.profiler import HardwareProfile
+from repro.sim.runner import Simulator
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    n_replicas: int = 3
+    router: str = "kv_aware_migrate"
+    peer_bw: float = 25e9              # interconnect NIC, bytes/s per dir
+    peer_latency_s: float = 0.0005
+    peer_curve: Optional[tuple] = None  # (size, bw) BandwidthCurve points
+    migrate_min_gain_s: float = 0.0    # hysteresis before leaving home
+    affinity_balance: float = 1.5      # new-program placement load guard
+    affinity_slack: int = 4
+    check_each_step: bool = False      # conservation + pool checks per step
+
+
+@dataclasses.dataclass
+class ClusterStats:
+    migrations: int = 0
+    migrated_tokens: int = 0
+    migrated_bytes: float = 0.0
+    migration_denied: int = 0          # target had no guaranteed room
+    cold_rehomes: int = 0
+    dropped_tokens: int = 0            # KV dropped by re-home decisions
+
+
+class Cluster:
+    def __init__(self, engines: list[Engine], ccfg: ClusterConfig,
+                 clock: Optional[ClusterClock] = None):
+        assert len(engines) >= 1
+        self.engines = engines
+        self.ccfg = ccfg
+        self.clock = clock or ClusterClock()
+        self.stats = ClusterStats()
+        self.seen_programs: set[str] = set()
+        # the single chronological cluster event stream (replay traces):
+        # migrate records here, per-step decision records appended by the
+        # replay harness's on_step
+        self.trace: list[dict] = []
+
+        from repro.serving.kvstore.transfer import resolve_bandwidth
+        bw = resolve_bandwidth(ccfg.peer_curve, ccfg.peer_bw)
+        self.links: dict[tuple[int, int], PeerLink] = {}
+        for e in engines:
+            if e.kvstore is not None:
+                e.kvstore.transfer.attach_peer_channels(
+                    bw, bw, ccfg.peer_latency_s)
+        if all(e.kvstore is not None for e in engines):
+            for i in range(len(engines)):
+                for j in range(len(engines)):
+                    if i != j:
+                        self.links[(i, j)] = PeerLink(engines[i], engines[j])
+        elif ccfg.router == "kv_aware_migrate":
+            raise ValueError("kv_aware_migrate needs an offload tier on "
+                             "every replica (EngineConfig.offload)")
+
+        self.router = ClusterRouter(
+            self, ccfg.router, migrate_min_gain_s=ccfg.migrate_min_gain_s,
+            affinity_balance=ccfg.affinity_balance,
+            affinity_slack=ccfg.affinity_slack)
+        self.clock.on_advance(self._pump_links)
+        for e in engines:
+            # per-replica queue ETA replaces the fleet-average T-bar in the
+            # TTL solver (queue-ETA-aware reload pricing)
+            e.scheduler.handler.queue_eta_fn = \
+                (lambda eng=e: eng.queue_eta(eng.clock))
+            # engines step on the shared clock; pre hooks keep it monotone
+            # and pump in-flight migration arrivals before admission
+            e.pre_step_hooks.append(
+                lambda _e, t: self.clock.advance(t))
+            if ccfg.check_each_step:
+                e.post_step_hooks.append(
+                    lambda _e, _ev, t: self.check(t))
+
+    # ------------------------------------------------------------ plumbing
+    def _pump_links(self, now: float) -> None:
+        """Arrival pump: migrations whose flight ended become plain target
+        tier residents (the in-flight protection pin is released)."""
+        for (_, j), link in self.links.items():
+            for m in link.pump(now):
+                self.engines[j].kvstore.unpin(m.program_id)
+
+    def _index_of(self, engine_id: str) -> int:
+        return next(i for i, e in enumerate(self.engines)
+                    if e.engine_id == engine_id)
+
+    # ----------------------------------------------------------- migration
+    def can_land(self, j: int, nbytes: float) -> bool:
+        """Conservative capacity pre-check: the target tier store must
+        have guaranteed room (free DRAM *or* free SSD for the whole run)
+        so an in-flight migration can never be dropped at landing."""
+        kv = self.engines[j].kvstore
+        if kv is None or nbytes <= 0:
+            return False
+        st = kv
+        blocks = st._blocks_for(nbytes)
+        return st.dram_free_blocks() >= blocks or \
+            (st.cfg.ssd_blocks > 0 and st.ssd_free_blocks() >= blocks)
+
+    def migration_eta(self, pid: str, src_i: int, dst_j: int,
+                      now: float) -> float:
+        """Peek: seconds until `pid`'s KV (as the source holds it now)
+        would land in the target's DRAM tier — staging readiness + both
+        NIC hops, nothing committed."""
+        src = self.engines[src_i]
+        link = self.links.get((src_i, dst_j))
+        if link is None or src.kvstore is None:
+            return math.inf
+        te = src.kvstore.transfer
+        pin = src.scheduler.pinned.get(pid)
+        if pin is not None:
+            nbytes = pin.tokens * src.scheduler._kv_bytes_per_token
+            _, staged = te.d2h.eta(nbytes, now)
+        else:
+            entry = src.kvstore.entries.get(pid)
+            if entry is None:
+                return math.inf
+            nbytes = entry.nbytes
+            staged = entry.dram_ready
+            if entry.ssd_blocks:
+                _, up = te.ssd_read.eta(entry.ssd_bytes, now,
+                                        earliest=entry.ssd_ready)
+                staged = max(staged, up)
+        return link.eta(nbytes, now, staged_ready=staged) - now
+
+    def _cancel_inflight(self, pid: str) -> None:
+        """Forget any undelivered ledger record for `pid` (its landed
+        entry is being consumed by a drop/re-migration before the flight
+        clock ran out — without this the ledger would report the entry
+        'lost in flight')."""
+        for link in self.links.values():
+            kept = []
+            for m in link.ledger:
+                if m.program_id == pid and not m.delivered:
+                    m.delivered = True
+                    link.n_delivered += 1
+                else:
+                    kept.append(m)
+            link.ledger = kept
+
+    def migrate(self, pid: str, src_i: int, dst_j: int, now: float) -> bool:
+        """Commit a cross-replica KV migration. Returns False (and leaves
+        the source untouched) when the target cannot guarantee room."""
+        src, dst = self.engines[src_i], self.engines[dst_j]
+        link = self.links.get((src_i, dst_j))
+        if link is None or src.kvstore is None or dst.kvstore is None:
+            return False
+        te = src.kvstore.transfer
+        pin = src.scheduler.pinned.get(pid)
+        if pin is not None:
+            tokens = pin.tokens
+            nbytes = tokens * src.scheduler._kv_bytes_per_token
+            if not self.can_land(dst_j, nbytes):
+                self.stats.migration_denied += 1
+                return False
+            # HBM -> host staging is a real d2h transfer on the source;
+            # migrate_out frees the pin without a home-tier demotion (the
+            # backend keeps a host copy that travels with the entry)
+            src.scheduler.migrate_out(pid, now, keep_copy=True)
+            staged = te.write_dram(nbytes, now).end
+            # a stale tier entry can coexist with the pin (a radix-tie
+            # admission leaves the offload entry unconsumed): the pin is
+            # the complete copy, so the stale entry must not stay behind
+            if src.kvstore.entries.get(pid) is not None:
+                self._cancel_inflight(pid)
+                src.kvstore.extract(pid)
+        else:
+            entry = src.kvstore.entries.get(pid)
+            if entry is None or entry.tokens <= 0:
+                return False
+            tokens, nbytes = entry.tokens, entry.nbytes
+            if not self.can_land(dst_j, nbytes):
+                self.stats.migration_denied += 1
+                return False
+            self._cancel_inflight(pid)   # re-migrating a mid-flight entry
+            src.kvstore.extract(pid)
+            staged = entry.dram_ready
+            if entry.ssd_blocks:
+                # the SSD suffix must be read up before the NIC can send
+                up = te.read_ssd(entry.ssd_bytes, now,
+                                 earliest=entry.ssd_ready)
+                staged = max(staged, up.end)
+            src.scheduler._log("migrate_out", pid, tokens)
+        m = link.send(pid, tokens, nbytes, now, staged_ready=staged)
+        landed = dst.kvstore.admit_migrated(pid, tokens, nbytes,
+                                                  now, ready_at=m.arrive)
+        assert landed is not None, \
+            f"migration of {pid} dropped at landing despite can_land"
+        dst.kvstore.pin(pid)      # in-flight protection until arrive
+        src_hc = getattr(src.backend, "host_caches", None)
+        dst_hc = getattr(dst.backend, "host_caches", None)
+        if src_hc is not None and dst_hc is not None and pid in src_hc:
+            dst_hc[pid] = src_hc.pop(pid)   # staged copy travels with it
+        self.stats.migrations += 1
+        self.stats.migrated_tokens += tokens
+        self.stats.migrated_bytes += nbytes
+        self.trace.append({"ev": "migrate", "pid": pid,
+                           "src": src.engine_id, "dst": dst.engine_id,
+                           "t": round(now, 9), "arrive": round(m.arrive, 9),
+                           "tokens": tokens})
+        return True
+
+    def drop_replica_kv(self, pid: str, i: int, now: float) -> int:
+        """Cold re-home / scatter policies: whatever KV replica `i` still
+        holds for `pid` is genuinely dropped (recompute-elsewhere was the
+        cheaper decision) — never left behind to go double-resident."""
+        e = self.engines[i]
+        tokens = e.scheduler.migrate_out(pid, now, keep_copy=False)
+        if e.kvstore is not None:
+            entry = e.kvstore.entries.get(pid)
+            if entry is not None:
+                tokens += entry.tokens
+                # the entry may still be inbound (scatter policies can
+                # re-home faster than the wire): close its ledger record
+                # so it reads as dropped, not lost in flight
+                self._cancel_inflight(pid)
+                e.kvstore.drop(pid)
+        self.stats.dropped_tokens += tokens
+        if tokens > 0:
+            # between-step decision: recorded in the cluster's own trace
+            # stream (the per-step decision sinks are already captured)
+            self.trace.append({"ev": "rehome_drop", "pid": pid,
+                               "replica": e.engine_id,
+                               "t": round(now, 9), "tokens": tokens})
+        return tokens
+
+    # -------------------------------------------------------- conservation
+    def residency(self, pid: str, now: float) -> list[str]:
+        """Where `pid`'s KV currently lives: replica ids (engine-held or
+        tier-resident — one location per replica) and/or PeerLink names
+        for undelivered migrations."""
+        inflight: dict[str, str] = {}   # dst engine_id -> link label
+        for (i, j), link in self.links.items():
+            for m in link.in_flight(now):
+                if m.program_id == pid:
+                    inflight[self.engines[j].engine_id] = \
+                        f"link:{m.src}->{m.dst}"
+        locs: list[str] = []
+        for e in self.engines:
+            held = pid in e.scheduler.pinned or \
+                any(r.program_id == pid for r in e.running)
+            entry = e.kvstore.entries.get(pid) \
+                if e.kvstore is not None else None
+            if entry is not None and e.engine_id in inflight:
+                locs.append(inflight[e.engine_id])   # still on the wire
+            elif held or entry is not None:
+                locs.append(e.engine_id)
+        return locs
+
+    def violations(self, now: float) -> list[str]:
+        """Conservation audit: programs whose KV is double-resident, and
+        in-flight migrations whose landed entry vanished mid-flight."""
+        out = []
+        for pid in sorted(self.seen_programs):
+            locs = self.residency(pid, now)
+            if len(locs) > 1:
+                out.append(f"{pid} double-resident: {locs}")
+        for (_, j), link in self.links.items():
+            dst = self.engines[j]
+            for m in link.in_flight(now):
+                held = m.program_id in dst.scheduler.pinned or \
+                    any(r.program_id == m.program_id for r in dst.running)
+                entry = dst.kvstore.entries.get(m.program_id)
+                if entry is None and not held:
+                    out.append(f"{m.program_id} lost in flight on "
+                               f"link:{m.src}->{m.dst}")
+        return out
+
+    def check(self, now: float) -> None:
+        """Assert conservation plus every replica's pool invariants."""
+        bad = self.violations(now)
+        assert not bad, bad
+        for e in self.engines:
+            e.blocks.check()
+            if e.kvstore is not None:
+                e.kvstore.check()
+            runtime = getattr(e.backend, "runtime", None)
+            if runtime is not None:
+                runtime.check(getattr(e.backend, "prefix_index", None))
+
+    # --------------------------------------------------------------- run
+    def run(self, programs, max_seconds: float = 36000.0,
+            on_step=None) -> Summary:
+        self.router.register_programs(programs)
+        sim = ClusterSimulator(self, max_seconds, on_step=on_step)
+        sim.add_programs(programs)
+        return sim.run()
+
+
+class ClusterSimulator(Simulator):
+    """The event runner on the cluster's shared clock: arrivals are
+    routed at cluster time (so migration pricing sees current queues and
+    in-flight state), and each engine step advances the clock through
+    its pre-step hook."""
+
+    def __init__(self, cluster: Cluster, max_seconds: float = 36000.0,
+                 on_step=None):
+        super().__init__(cluster.engines, cluster.router, max_seconds,
+                         on_step=on_step)
+        self.cluster = cluster
+
+    def _deliver_arrivals(self) -> None:
+        self.cluster.clock.advance(self.now)
+        super()._deliver_arrivals()
+
+
+def build_cluster(arch: ModelConfig, ecfg: EngineConfig,
+                  ccfg: ClusterConfig = ClusterConfig(),
+                  hw: HardwareProfile = HardwareProfile()) -> Cluster:
+    """N identically-configured replicas sharing one calibrated cost
+    model (profiles are per-(model, hardware), not per-replica)."""
+    engines: list[Engine] = []
+    cost = None
+    for i in range(ccfg.n_replicas):
+        eng = Engine(arch, ecfg, hw, cost=cost, engine_id=f"r{i}")
+        cost = cost if cost is not None else eng.cost
+        engines.append(eng)
+    return Cluster(engines, ccfg)

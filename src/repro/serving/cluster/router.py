@@ -1,0 +1,183 @@
+"""KV-aware cluster routing: Continuum's TTL economics *between* engines.
+
+The single-engine scheduler already prices retention as
+``reload/recompute cost vs queueing delay`` (Eq. 2). The moment there
+are replicas, the same trade-off becomes a *placement* problem: a
+program returning from a tool call may find its home replica congested
+while a peer is idle but cold. For every returning request the router
+scores each replica with the TTL model's ingredients:
+
+    home  (KV pinned)        cost = queue_eta(home)
+    home  (KV in tiers)      cost = queue_eta(home) + reload_eta(home)
+    peer  (recompute cold)   cost = queue_eta(peer) + recompute_seconds
+    peer  (migrate the KV)   cost = max(queue_eta(peer), flight_eta)
+                                    + h2d_seconds(peer)
+
+``queue_eta`` is :meth:`Engine.queue_eta` (the same per-replica estimate
+the TTL solver now takes); ``reload_eta`` is the tier store's queue-aware
+chain; ``flight_eta`` is the PeerLink's three-hop peek; migration
+overlaps the target queue (the KV flies while the request waits), while
+a recompute cannot (it needs the accelerator). The cheapest option wins;
+``migrate_min_gain_s`` adds hysteresis so marginal wins don't thrash.
+
+Placement never reorders programs relative to their cluster-wide arrival
+order: every scheduler sorts its queue by the *global*
+``program_arrival_time`` (program-level FCFS is preserved fleet-wide, a
+replica simply serves the FCFS-minimal subset routed to it).
+
+Policies (the bench_cluster grid):
+
+- ``round_robin``      — scatter turns; any KV left behind is dropped.
+- ``sticky``           — session affinity, never migrates (the old
+                         ``Router(policy="session")`` behavior).
+- ``kv_aware``         — cost-scored placement, but a re-home always
+                         recomputes cold (the KV never moves).
+- ``kv_aware_migrate`` — full model: re-homes ship the KV over the
+                         PeerLink when that beats recomputing.
+
+New programs (turn 0) place by shared-prefix affinity with the load
+guard of the legacy :class:`~repro.serving.router.Router` (cache heat
+never herds the fleet onto one replica); ``round_robin`` scatters,
+``sticky`` takes the least-loaded replica.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core.types import Program, Request
+
+POLICIES = ("round_robin", "sticky", "kv_aware", "kv_aware_migrate")
+
+
+class ClusterRouter:
+    def __init__(self, cluster, policy: str = "kv_aware_migrate",
+                 migrate_min_gain_s: float = 0.0,
+                 affinity_balance: float = 1.5, affinity_slack: int = 4):
+        assert policy in POLICIES, policy
+        self.cluster = cluster
+        self.engines = cluster.engines
+        self.policy = policy
+        self.migrate_min_gain_s = migrate_min_gain_s
+        self.affinity_balance = affinity_balance
+        self.affinity_slack = affinity_slack
+        self.session_map: dict[str, int] = {}     # program -> home replica
+        self._programs: dict[str, Program] = {}
+        self._rr = 0
+
+    # ------------------------------------------------------ compat surface
+    def register_programs(self, programs: list[Program]) -> None:
+        for p in programs:
+            self._programs[p.program_id] = p
+
+    def program_of(self, program_id: str) -> Optional[Program]:
+        return self._programs.get(program_id)
+
+    # -------------------------------------------------------------- route
+    def route(self, req: Request):
+        now = self.cluster.clock.now
+        pid = req.program_id
+        self.cluster.seen_programs.add(pid)
+        home = self.session_map.get(pid)
+        if self.policy == "round_robin":
+            idx = self._rr % len(self.engines)
+            self._rr += 1
+            if home is not None and home != idx:
+                # the turn runs elsewhere: whatever KV the old home still
+                # holds is garbage (conservation: drop, don't leak)
+                self.cluster.drop_replica_kv(pid, home, now)
+            self.session_map[pid] = idx
+            return self.engines[idx]
+        if home is None:
+            idx = self._place_new(req)
+            self.session_map[pid] = idx
+            return self.engines[idx]
+        if self.policy == "sticky":
+            return self.engines[home]
+        idx, migrate = self._best_replica(req, home, now)
+        if idx != home:
+            if not (migrate and self.cluster.migrate(pid, home, idx, now)):
+                # recompute-cold re-home (or a denied migration): the old
+                # home's copy is dropped so the KV is never double-resident
+                self.cluster.drop_replica_kv(pid, home, now)
+                self.cluster.stats.cold_rehomes += 1
+            self.session_map[pid] = idx
+        return self.engines[idx]
+
+    # ----------------------------------------------------------- placement
+    def _place_new(self, req: Request) -> int:
+        """First turn: prefix-affinity with the herding guard (kv-aware
+        policies); plain least-loaded for ``sticky``."""
+        loads = [e.load() for e in self.engines]
+        if self.policy == "sticky":
+            return min(range(len(loads)), key=lambda i: (loads[i], i))
+        cap = min(loads) * self.affinity_balance + self.affinity_slack
+        best, best_key = 0, None
+        for i, e in enumerate(self.engines):
+            match = e.prefix_match_tokens(req) \
+                if hasattr(e, "prefix_match_tokens") else 0
+            if loads[i] > cap:
+                match = 0
+            key = (-match, loads[i], i)
+            if best_key is None or key < best_key:
+                best, best_key = i, key
+        return best
+
+    def _recompute_seconds(self, engine, req: Request) -> float:
+        """Cold-start cost on `engine`: prefill the prompt minus whatever
+        its shared-prefix index already covers."""
+        cover = engine.prefix_match_tokens(req) \
+            if engine.prefix_index is not None else 0
+        fn = engine.scheduler.recompute_estimate_fn
+        tokens = max(req.prompt_len - cover, 0)
+        return fn(tokens) if fn is not None else 0.0
+
+    def _best_replica(self, req: Request, home: int,
+                      now: float) -> tuple[int, bool]:
+        """Score every replica for this returning request; returns
+        (winner index, ship-the-KV?)."""
+        pid = req.program_id
+        home_e = self.engines[home]
+        pin = home_e.scheduler.pinned.get(pid)
+        entry = home_e.kvstore.entries.get(pid) \
+            if home_e.kvstore is not None else None
+        if pin is None and entry is not None and entry.pinned:
+            # the entry is an inbound migration still on the wire: moving
+            # it again before it lands is pure thrash — stay home
+            return home, False
+        kv_tokens = pin.tokens if pin is not None else \
+            (entry.tokens if entry is not None else 0)
+        nbytes = kv_tokens * home_e.scheduler._kv_bytes_per_token
+        can_migrate = (self.policy == "kv_aware_migrate" and kv_tokens > 0)
+
+        home_cost = 0.0
+        scored: list[tuple[float, int, bool]] = []
+        for j, e in enumerate(self.engines):
+            eta = e.queue_eta(now)
+            if j == home:
+                if pin is not None:
+                    cost = eta                       # hot in HBM
+                elif entry is not None:
+                    cost = eta + e.kvstore.transfer.reload_eta(
+                        entry.dram_bytes, entry.ssd_bytes, now,
+                        dram_ready=entry.dram_ready,
+                        ssd_ready=entry.ssd_ready)
+                else:
+                    cost = eta + self._recompute_seconds(e, req)
+                home_cost = cost
+                scored.append((cost, j, False))
+                continue
+            cost = eta + self._recompute_seconds(e, req)
+            migrate = False
+            if can_migrate and self.cluster.can_land(j, nbytes):
+                flight = self.cluster.migration_eta(pid, home, j, now)
+                mcost = max(eta, flight) \
+                    + e.kvstore.transfer.h2d.seconds(nbytes)
+                if mcost < cost:
+                    cost, migrate = mcost, True
+            scored.append((cost, j, migrate))
+        # cheapest replica; ties prefer home, then the lowest index
+        cost, j, migrate = min(
+            scored, key=lambda s: (s[0], 0 if s[1] == home else 1, s[1]))
+        if j != home and home_cost - cost <= self.migrate_min_gain_s:
+            return home, False                       # hysteresis: stay put
+        return j, migrate

@@ -205,6 +205,26 @@ class Engine:
                     and hasattr(self.backend, "enable_prefix_sharing"):
                 self.backend.enable_prefix_sharing()
 
+        # accounting-index radix evictions propagate to the backend's
+        # page-stamped mirror (same hash chain, same keep depth), so the
+        # two trees cannot drift: without this the mirror frees pages only
+        # under physical page pressure, and its LRU may pick *different*
+        # victims than accounting did — paths the scheduler still serves
+        # then materialize as shortfall_tokens defensive recomputes
+        if self.prefix_index is not None \
+                and hasattr(self.backend, "drop_prefix_chain"):
+            backend = self.backend
+            self.prefix_index.on_evict_node = (
+                lambda node: backend.drop_prefix_chain(
+                    node.path_hashes(),
+                    node.depth_blocks() - node.n_blocks))
+
+        # cluster serving hooks: pre hooks run before admission (peer-link
+        # pump), post hooks after every step() call including idle ones
+        # (conservation checks) — both on the externally-driven clock
+        self.pre_step_hooks: list[Callable] = []    # fn(engine, now)
+        self.post_step_hooks: list[Callable] = []   # fn(engine, events, now)
+
         self.running: list[Request] = []
         self.programs: dict[str, ProgramStats] = {}
         self.steps = 0
@@ -238,11 +258,38 @@ class Engine:
         """Routing signal: running + waiting footprint."""
         return len(self.running) + len(self.scheduler.waiting)
 
+    def queue_eta(self, now: float) -> float:
+        """Routing/TTL signal: rough seconds until a *new* arrival would
+        reach the head of this replica's queue — the outstanding prefill
+        of running + waiting requests plus the decode backlog of running
+        sequences, priced by the analytic cost model. Deterministic,
+        side-effect free; the cluster router folds it into placement and
+        the TTL model uses it as the per-replica out-of-order delay
+        (``TTLModel.solve(queue_eta=...)``)."""
+        pre = sum(r.prompt_len - r.prefill_pos for r in self.running
+                  if not r.done_prefill())
+        # waiting requests admit against their TTL pins: count only the
+        # uncovered suffix (a queue of pinned returners is nearly free,
+        # and overestimating it would trigger pointless migrations)
+        pre += sum(max(r.prompt_len - self.scheduler._pin_tokens(r), 0)
+                   for r in self.scheduler.waiting)
+        dec = sum(max(r.output_len - r.generated, 0) for r in self.running)
+        if pre <= 0 and dec <= 0:
+            return 0.0
+        batch = min(max(len(self.running), 1), self.ecfg.max_batch)
+        ctxs = [r.prompt_len + r.generated for r in self.running]
+        avg_ctx = int(sum(ctxs) / len(ctxs)) if ctxs else 0
+        steps = dec / batch
+        return (self.cost.prefill_seconds(pre, 0)
+                + steps * self.cost.decode_step_seconds(batch, avg_ctx))
+
     # ----------------------------------------------------------------- step
     def step(self, now: float) -> StepEvents:
         ev = StepEvents()
         self.clock = now            # anchors TransferEngine-based pricing
         self.scheduler.decision_sink = ev.decisions
+        for hook in self.pre_step_hooks:
+            hook(self, now)
         # 1. admission (Algorithm 1 Schedule())
         cap = self.ecfg.max_batch - len(self.running)
         if cap > 0:
@@ -254,7 +301,7 @@ class Engine:
 
         if not self.running:
             ev.idle = True
-            return ev
+            return self._finish_step(ev, now)
 
         # 2. compose the batch: chunked prefill + decode
         budget = self.ecfg.chunk_size
@@ -346,6 +393,17 @@ class Engine:
                 else:
                     ev.tool_started.append((r, r.tool))
                     ps.total_tool_time += r.tool_duration
+        return self._finish_step(ev, now)
+
+    def _finish_step(self, ev: StepEvents, now: float) -> StepEvents:
+        """Run post-step hooks and detach the decision sink: once the
+        step's events are handed out (and possibly serialized by a trace
+        capture), between-step actors — the cluster router migrating or
+        dropping KV at arrival time — must not mutate them. Cluster-level
+        decisions are recorded in the cluster's own trace stream."""
+        for hook in self.post_step_hooks:
+            hook(self, ev, now)
+        self.scheduler.decision_sink = None
         return ev
 
     def _note_first_token(self, r: Request, at: float) -> None:

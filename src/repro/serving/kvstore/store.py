@@ -180,11 +180,17 @@ class TieredKVStore:
 
     # ----------------------------------------------------------------- put
     def put(self, program_id: str, tokens: int, nbytes: float,
-            now: float = 0.0, from_hbm: bool = True) -> Optional[KVEntry]:
+            now: float = 0.0, from_hbm: bool = True,
+            ready_at: float = 0.0) -> Optional[KVEntry]:
         """Admit a program's KV prefix (TTL-expiry/preemption demotion).
         Async write: the entry exists immediately but is reloadable only
         after the D2H copy completes. Returns the entry, or None if it
-        fit in no tier (dropped)."""
+        fit in no tier (dropped).
+
+        ``ready_at`` is when the source bytes exist in host DRAM for a
+        non-HBM put (a cross-replica migration still on the wire): the
+        DRAM entry is reloadable no earlier, and an SSD spill write
+        cannot occupy its channel before then."""
         if not self.cfg.enabled or nbytes <= 0:
             return None
         self._remove(program_id)       # replacement, not an eviction
@@ -195,8 +201,8 @@ class TieredKVStore:
         if self.dram_free_blocks() >= blocks:
             entry.dram_blocks = blocks
             self.dram_used_blocks += blocks
-            if from_hbm:
-                entry.dram_ready = self.transfer.write_dram(nbytes, now).end
+            entry.dram_ready = self.transfer.write_dram(nbytes, now).end \
+                if from_hbm else ready_at
             self.entries[program_id] = entry
             self.stats.puts += 1
             return entry
@@ -204,7 +210,7 @@ class TieredKVStore:
             entry.ssd_blocks = blocks
             self.ssd_used_blocks += blocks
             staged = self.transfer.write_dram(nbytes, now).end if from_hbm \
-                else now
+                else max(now, ready_at)
             entry.ssd_ready = self.transfer.write_ssd(nbytes, now,
                                                       earliest=staged).end
             self.entries[program_id] = entry
@@ -356,6 +362,27 @@ class TieredKVStore:
         self.stats.reload_seconds += secs
         self._remove(program_id)
         return secs
+
+    # ------------------------------------------------------- cluster moves
+    def extract(self, program_id: str) -> Optional[KVEntry]:
+        """Remove and return ``program_id``'s entry because its KV is
+        *departing* this replica on a peer link — neither an eviction
+        (``on_drop`` does not fire; the host copy travels with it) nor a
+        reload (no channel time is charged here: the cluster layer prices
+        the SSD read-up / interconnect hops explicitly)."""
+        return self._remove(program_id)
+
+    def admit_migrated(self, program_id: str, tokens: int, nbytes: float,
+                       now: float, ready_at: float) -> Optional[KVEntry]:
+        """Land a cross-replica migration in this replica's tiers: a
+        ``put`` that arrives over the interconnect (never from this
+        replica's HBM) and is reloadable only once the inbound transfer
+        lands (``ready_at``, the peer-link arrival time — an SSD spill
+        write also queues no earlier than that). Returns the entry, or
+        None if no tier could take it (the caller must capacity-check
+        first — a dropped migration is lost KV)."""
+        return self.put(program_id, tokens, nbytes, now=now,
+                        from_hbm=False, ready_at=ready_at)
 
     # ---------------------------------------------------------------- drop
     def _remove(self, program_id: str) -> Optional[KVEntry]:

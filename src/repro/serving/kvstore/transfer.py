@@ -179,6 +179,36 @@ class TransferEngine:
         self.d2h = Channel("d2h", d2h_bw, latency)
         self.ssd_read = Channel("ssd_read", ssd_read_bw, latency)
         self.ssd_write = Channel("ssd_write", ssd_write_bw, latency)
+        # cross-replica interconnect NIC: send/receive direction pair,
+        # attached lazily by the cluster layer (None = single replica)
+        self.peer_out: Optional[Channel] = None
+        self.peer_in: Optional[Channel] = None
+
+    # ---------------------------------------------------------------- peers
+    def attach_peer_channels(self, out_bw: Bandwidth, in_bw: Bandwidth,
+                             latency: float = 0.0) -> None:
+        """Add the cross-replica interconnect direction pair. Like the
+        four tier channels, each direction is one serial queue: every
+        outbound migration from this replica shares (and queues on)
+        ``peer_out``, every inbound one on ``peer_in`` — so concurrent
+        migrations to/from one replica serialize on its NIC while
+        opposite directions overlap (full duplex). Idempotent."""
+        if self.peer_out is None:
+            self.peer_out = Channel("peer_out", out_bw, latency)
+        if self.peer_in is None:
+            self.peer_in = Channel("peer_in", in_bw, latency)
+
+    def send_peer(self, nbytes: float, now: float,
+                  earliest: float = 0.0) -> Transfer:
+        """Outbound hop of a cross-replica KV migration (source NIC)."""
+        assert self.peer_out is not None, "attach_peer_channels first"
+        return self.peer_out.submit(nbytes, now, earliest)
+
+    def recv_peer(self, nbytes: float, now: float,
+                  earliest: float = 0.0) -> Transfer:
+        """Inbound hop of a cross-replica KV migration (target NIC)."""
+        assert self.peer_in is not None, "attach_peer_channels first"
+        return self.peer_in.submit(nbytes, now, earliest)
 
     # ------------------------------------------------------------- writes
     def write_dram(self, nbytes: float, now: float,
@@ -233,7 +263,9 @@ class TransferEngine:
         return done - now
 
     def usage(self) -> dict:
+        chans = [self.h2d, self.d2h, self.ssd_read, self.ssd_write]
+        chans += [c for c in (self.peer_out, self.peer_in) if c is not None]
         return {c.name: {"bytes_moved": c.bytes_moved,
                          "transfers": c.n_transfers,
                          "busy_until": c.busy_until}
-                for c in (self.h2d, self.d2h, self.ssd_read, self.ssd_write)}
+                for c in chans}

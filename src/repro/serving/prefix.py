@@ -122,6 +122,18 @@ class RadixNode:
             node = node.parent
         return n
 
+    def path_hashes(self) -> tuple:
+        """The full block-hash chain root→this node (its identity across
+        trees: the same prompt produces the same chain in the scheduler's
+        accounting index and the backend's page-stamped mirror, even when
+        the two trees split their edges differently)."""
+        out: list = []
+        node = self
+        while node.parent is not None:
+            out = list(node.edge) + out
+            node = node.parent
+        return tuple(out)
+
 
 class RadixPrefixIndex:
     """Per-engine radix tree over prompt block hashes, backed by the
@@ -254,6 +266,18 @@ class RadixPrefixIndex:
         self.stats.dup_blocks_freed += dup
         return new, dup, node
 
+    def _unlink(self, n: RadixNode) -> int:
+        """Detach a refcount-zero leaf, free its blocks through the shared
+        pool and notify ``on_evict_node`` (while the node is still
+        attached, so the callback can walk ``path_hashes``)."""
+        if self.on_evict_node is not None:         # deref physical pages /
+            self.on_evict_node(n)                  # mirror-index sync
+        if self.blocks is not None:
+            self.blocks.shared_free(n.n_blocks)
+        del n.parent.children[n.edge[0]]
+        n.parent = None
+        return n.n_blocks
+
     def evict(self, need_blocks: int) -> int:
         """LRU-evict refcount-zero leaves until `need_blocks` are freed (or
         nothing evictable remains). Frees via the BlockManager shared pool.
@@ -276,17 +300,59 @@ class RadixPrefixIndex:
             if n.refs != 0 or n.children:          # stale entry
                 continue
             parent = n.parent
-            del parent.children[n.edge[0]]
-            n.parent = None
-            freed += n.n_blocks
-            if self.blocks is not None:
-                self.blocks.shared_free(n.n_blocks)
-            if self.on_evict_node is not None:     # deref physical pages
-                self.on_evict_node(n)
+            freed += self._unlink(n)
             if parent is not self.root and not parent.children \
                     and parent.refs == 0:
                 seq += 1
                 heapq.heappush(heap, (parent.last_access, seq, parent))
+        self.stats.evicted_blocks += freed
+        return freed
+
+    def evict_chain(self, hashes: tuple, keep_blocks: int = 0) -> int:
+        """Evict the cached blocks of one specific hash chain beyond its
+        first ``keep_blocks`` blocks — the cross-tree propagation hook: when
+        the scheduler's *accounting* index LRU-evicts a path, the backend's
+        page-stamped mirror drops the same chain so the two trees cannot
+        drift (the drift shows up as ``shortfall_tokens`` defensive
+        recomputes, or as mirror pages pinned long after accounting freed
+        them). Best-effort and refcount-safe: nodes that still have
+        holders, or children (another prompt diverges below them), are left
+        alone — and blocks *off* the chain (an edge that diverges from or
+        extends beyond it, i.e. a longer prompt this tree still caches) are
+        never touched. Returns blocks freed."""
+        # descend collecting only full-edge matches; a node whose edge
+        # diverges from or runs past the chain's end stops the walk — its
+        # blocks back a longer/other prompt this tree still caches, so
+        # nothing at or below it is evictable here
+        node, i = self.root, 0
+        while i < len(hashes):
+            child = node.children.get(hashes[i])
+            if child is None:
+                break
+            lim = min(len(child.edge), len(hashes) - i)
+            j = 0
+            while j < lim and child.edge[j] == hashes[i + j]:
+                j += 1
+            if j < len(child.edge):
+                break
+            node, i = child, i + j
+        freed = 0
+        while node is not None and node.parent is not None:
+            if node.refs != 0 or node.children:
+                break
+            start = node.depth_blocks() - node.n_blocks
+            parent = node.parent
+            if start >= keep_blocks:
+                freed += self._unlink(node)        # whole node goes
+                node = parent
+            elif node.depth_blocks() > keep_blocks:
+                # edge straddles the keep boundary: split (node becomes the
+                # tail half under the new upper node) and evict the tail
+                self._split(node, keep_blocks - start)
+                freed += self._unlink(node)
+                break
+            else:
+                break
         self.stats.evicted_blocks += freed
         return freed
 

@@ -176,6 +176,99 @@ class CostModel:
         return float(np.polyval(coef, max(tokens, 0)))
 
 
+@dataclasses.dataclass
+class StepSample:
+    """One engine step observed by a measuring backend (e.g. the replay
+    harness's ShadowClockBackend): the measured wall-clock duration plus
+    the step's composition, enough to re-price it under any
+    HardwareProfile."""
+    measured_s: float
+    prefill_tokens: int
+    prefill_context: int
+    decode_batch: int
+    decode_avg_context: int
+
+
+def step_gap(samples: list[StepSample], prof: ModelServingProfile,
+             hw: HardwareProfile) -> float:
+    """Total |measured − analytic| seconds over `samples` under `hw`."""
+    cost = CostModel(prof, hw)
+    return float(sum(abs(s.measured_s - cost.step_seconds(
+        s.prefill_tokens, s.prefill_context, s.decode_batch,
+        s.decode_avg_context)) for s in samples))
+
+
+def calibrate_hardware(samples: list[StepSample],
+                       prof: ModelServingProfile, hw: HardwareProfile,
+                       iters: int = 3,
+                       outlier_factor: float = 10.0) -> HardwareProfile:
+    """Auto-calibrate ``mfu``/``decode_eff`` from measured step durations.
+
+    The analytic model is linear in (1/mfu, 1/decode_eff) once each
+    step's decode phase is classified memory- vs flops-bound:
+
+        measured ≈ P·(1/mfu) + D·(1/decode_eff)
+
+    where P is the step's mfu-independent prefill numerator (plus the
+    decode flops numerator when flops-bound) and D its decode memory
+    numerator. We alternate a least-squares solve with re-classification
+    (the ``max()`` in ``decode_step_seconds`` is the only nonlinearity)
+    for ``iters`` rounds and return the candidate profile with the
+    smallest total gap — never worse than the input ``hw``.
+
+    Samples whose measured duration exceeds ``outlier_factor`` × the
+    median are dropped from the *fit* (JIT-compile warmup steps), though
+    every candidate is still scored on the full set. A calibrated
+    efficiency above 1.0 is allowed: it means the profile's peak
+    flops/bandwidth are mis-specified for this host, and wall-clock
+    accuracy (what the TTL model needs) beats physical plausibility."""
+    if not samples:
+        return hw
+    meas = np.asarray([s.measured_s for s in samples])
+    med = float(np.median(meas))
+    fit = [s for s in samples
+           if med <= 0 or s.measured_s <= outlier_factor * med] or samples
+
+    def numerators(s: StepSample, h: HardwareProfile):
+        cost = CostModel(prof, h)
+        pre = cost.prefill_seconds(s.prefill_tokens, s.prefill_context)
+        p_num = pre * h.mfu
+        d_mem = 0.0
+        d_flops = 0.0
+        if s.decode_batch > 0:
+            mem = (prof.active_param_bytes + s.decode_batch *
+                   (s.decode_avg_context * prof.kv_bytes_per_token +
+                    prof.state_bytes)) / (h.hbm_bw * prof.chips)
+            fl = s.decode_batch * prof.flops_per_token / \
+                (h.flops * prof.chips)
+            if fl / h.mfu > mem / h.decode_eff:     # flops-bound decode
+                d_flops = fl
+            else:
+                d_mem = mem
+        return p_num, d_mem, d_flops
+
+    cands = [hw]
+    cur = hw
+    for _ in range(max(iters, 1)):
+        rows, y = [], []
+        for s in fit:
+            p_num, d_mem, d_flops = numerators(s, cur)
+            rows.append([p_num + d_flops, d_mem])
+            y.append(s.measured_s)
+        A = np.asarray(rows)
+        use = [i for i in range(2) if float(np.abs(A[:, i]).sum()) > 0]
+        if not use:
+            break
+        x, *_ = np.linalg.lstsq(A[:, use], np.asarray(y), rcond=None)
+        inv = {0: 1.0 / cur.mfu, 1: 1.0 / cur.decode_eff}
+        for i, xi in zip(use, x):
+            inv[i] = max(float(xi), 1e-9)
+        cur = dataclasses.replace(hw, mfu=1.0 / inv[0],
+                                  decode_eff=1.0 / inv[1])
+        cands.append(cur)
+    return min(cands, key=lambda h: step_gap(samples, prof, h))
+
+
 def make_prefill_reload_fn(cost: CostModel, coef: np.ndarray,
                            store=None, clock: Callable[[], float] | None = None):
     """PrefillReload(r) for the TTL model: time to reconstruct r's context,

@@ -201,15 +201,40 @@ class ShadowClockBackend:
     """Physical execution on the logical clock: runs the real backend for
     its side effects (pages, staging, COW), reports the analytic cost
     model's step duration — so the logical and physical engines see
-    identical virtual time and must make identical decisions."""
+    identical virtual time and must make identical decisions.
+
+    Every step's *measured* wall duration is recorded next to its
+    composition (:class:`~repro.serving.profiler.StepSample`), so the
+    measured-vs-analytic gap the shadow clock deliberately discards is
+    not lost: :meth:`calibrate` fits ``HardwareProfile.mfu`` /
+    ``decode_eff`` to it (``profiler.calibrate_hardware``), turning a
+    replay run into the paper's <10-min offline profile for this host."""
 
     def __init__(self, inner, cost: CostModel):
         self.inner = inner
+        self.cost = cost
         self._cost_backend = SimBackend(cost)
+        self.samples: list = []          # StepSample per executed step
 
     def execute(self, prefill, decode) -> float:
-        self.inner.execute(prefill, decode)
-        return self._cost_backend.execute(prefill, decode)
+        from repro.serving.profiler import StepSample
+        measured = self.inner.execute(prefill, decode)
+        analytic = self._cost_backend.execute(prefill, decode)
+        d_ctx = (sum(r.prompt_len + r.generated for r in decode)
+                 // len(decode)) if decode else 0
+        self.samples.append(StepSample(
+            measured_s=measured,
+            prefill_tokens=sum(w.chunk for w in prefill),
+            prefill_context=max((w.context for w in prefill), default=0),
+            decode_batch=len(decode), decode_avg_context=d_ctx))
+        return analytic
+
+    def calibrate(self, **kw):
+        """HardwareProfile with mfu/decode_eff fitted to the recorded
+        measured-vs-analytic step gap (see ROADMAP follow-up (d))."""
+        from repro.serving.profiler import calibrate_hardware
+        return calibrate_hardware(self.samples, self.cost.prof,
+                                  self.cost.hw, **kw)
 
     def __getattr__(self, name):    # hooks + runtime resolve on the inner
         return getattr(self.inner, name)
@@ -359,6 +384,139 @@ def run_differential(programs: list[Program],
                "shortfall_tokens": backend.shortfall_tokens})
 
 
+# ----------------------------------------------------------- cluster mode
+@dataclasses.dataclass
+class ClusterReplayReport:
+    """Verdict of a cluster replay: the same seeded trace through an
+    N-replica cluster must be (a) deterministic — two runs produce
+    byte-identical cluster traces (per-step decision streams tagged with
+    replica ids, interleaved with migration events) — and (b)
+    conservative — at every step boundary no program's KV is
+    double-resident across replicas/links or lost across a migration."""
+    deterministic: bool
+    conservation_violations: int
+    steps: int
+    migrations: int
+    first_divergence: Optional[dict]
+    violation_examples: list = dataclasses.field(default_factory=list)
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.deterministic and self.conservation_violations == 0
+
+    def describe(self) -> str:
+        if self.ok:
+            return (f"MATCH: {self.steps} cluster steps byte-identical "
+                    f"across runs; 0 conservation violations "
+                    f"(migrations={self.migrations}, "
+                    f"cold_rehomes={self.stats.get('cold_rehomes')}, "
+                    f"reloads={self.stats.get('offload_reloads')})")
+        out = ["DIVERGENCE:"]
+        if not self.deterministic and self.first_divergence is not None:
+            d = self.first_divergence
+            out.append(f"  first differing trace line #{d['line']}:")
+            out.append(f"    run A: {d.get('a')}")
+            out.append(f"    run B: {d.get('b')}")
+        if self.conservation_violations:
+            out.append(f"  {self.conservation_violations} conservation "
+                       f"violations, e.g. {self.violation_examples[:3]}")
+        return "\n".join(out)
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["ok"] = self.ok
+        return d
+
+
+def cluster_programs(seed: int, n: int = 10) -> list[Program]:
+    """Seeded skewed smoke workload for cluster replays: hot-tenant skew
+    concentrates prefix affinity, tool storms synchronize returns, churn
+    keeps re-homing live — all three migration triggers on a CPU-fast
+    fleet."""
+    from repro.sim.workload import generate_skewed_programs
+    return generate_skewed_programs(
+        SMOKE_SPEC, n=n, rate_jps=2.0, seed=seed, tenants=3,
+        tenant_skew=1.4, share_ratio=0.3, storm_frac=0.4,
+        storm_gap_s=2.0, churn_frac=0.3, churn_scale=6.0)
+
+
+def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
+                      replicas: int = 3,
+                      router: str = "kv_aware_migrate"
+                      ) -> tuple[list[str], list[str], object]:
+    """One cluster replay leg on the logical stack. Returns (trace lines,
+    conservation violations observed at step boundaries, cluster)."""
+    from repro.serving.cluster import Cluster, ClusterConfig
+    cfg = get_config(rc.arch, smoke=True)
+    prof = build_profile(cfg, 1)
+    hw = rc.hardware()
+    cost = CostModel(prof, hw)
+    block_bytes = rc.block_size * prof.kv_bytes_per_token
+    engines = [Engine(cfg, rc.engine_config(block_bytes), hw, cost=cost,
+                      engine_id=f"r{i}") for i in range(replicas)]
+    ccfg = ClusterConfig(
+        n_replicas=replicas, router=router,
+        peer_bw=2 * rc.h2d_bw_blocks * block_bytes,
+        peer_latency_s=0.001)
+    cluster = Cluster(engines, ccfg)
+    violations: list[str] = []
+
+    def _capture(e, ev, now):
+        if ev.decisions:
+            cluster.trace.append({
+                "ev": "step", "replica": e.engine_id, "now": round(now, 9),
+                "events": [list(d) for d in ev.decisions]})
+        violations.extend(cluster.violations(now))
+
+    cluster.run(_clone_programs(programs), max_seconds=rc.max_seconds,
+                on_step=_capture)
+    lines = [json.dumps(d, sort_keys=True) for d in cluster.trace]
+    return lines, violations, cluster
+
+
+def run_cluster_replay(programs: list[Program],
+                       rc: ReplayConfig = ReplayConfig(),
+                       replicas: int = 3,
+                       router: str = "kv_aware_migrate",
+                       first: Optional[tuple] = None) -> ClusterReplayReport:
+    """Run the trace twice; verdict = byte-identical traces + zero
+    conservation violations. ``first`` reuses an existing
+    ``run_cluster_trace`` result as run A (the CLI records the trace
+    artifact with it — no third simulation)."""
+    lines_a, viol_a, cluster = first if first is not None else \
+        run_cluster_trace(programs, rc, replicas, router)
+    lines_b, _, _ = run_cluster_trace(programs, rc, replicas, router)
+    div = None
+    for i, (a, b) in enumerate(zip(lines_a, lines_b)):
+        if a != b:
+            div = {"line": i, "a": a, "b": b}
+            break
+    if div is None and len(lines_a) != len(lines_b):
+        i = min(len(lines_a), len(lines_b))
+        div = {"line": i,
+               "a": lines_a[i] if i < len(lines_a) else None,
+               "b": lines_b[i] if i < len(lines_b) else None}
+    st = cluster.engines[0].scheduler.stats
+    return ClusterReplayReport(
+        deterministic=div is None,
+        conservation_violations=len(viol_a),
+        steps=len(lines_a),
+        migrations=cluster.stats.migrations,
+        first_divergence=div,
+        violation_examples=viol_a[:5],
+        stats={"cold_rehomes": cluster.stats.cold_rehomes,
+               "offload_reloads": sum(e.scheduler.stats.offload_reloads
+                                      for e in cluster.engines),
+               "demotions": sum(e.scheduler.stats.demotions
+                                for e in cluster.engines),
+               "preemptions": sum(e.scheduler.stats.preemptions
+                                  for e in cluster.engines),
+               "migrated_tokens": cluster.stats.migrated_tokens,
+               "migration_denied": cluster.stats.migration_denied,
+               "engine0_pins": st.pins})
+
+
 # ----------------------------------------------------------------- CLI
 def main(argv=None) -> int:
     import argparse
@@ -367,11 +525,30 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
     ap.add_argument("--programs", type=int, default=6)
     ap.add_argument("--out", type=str, default="experiments/replay")
+    ap.add_argument("--cluster", action="store_true",
+                    help="cluster mode: N-replica determinism + KV "
+                         "conservation gate (logical stack)")
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--router", type=str, default="kv_aware_migrate")
     args = ap.parse_args(argv)
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     failed = False
     for seed in args.seeds:
+        if args.cluster:
+            progs = cluster_programs(seed, n=max(args.programs, 10))
+            first = run_cluster_trace(
+                progs, ReplayConfig(), args.replicas, args.router)
+            (out / f"cluster_trace_seed{seed}.jsonl").write_text(
+                "\n".join(first[0]) + "\n")
+            report = run_cluster_replay(progs, ReplayConfig(),
+                                        args.replicas, args.router,
+                                        first=first)
+            (out / f"cluster_verdict_seed{seed}.json").write_text(
+                json.dumps(report.to_json(), indent=2, default=str))
+            print(f"cluster seed {seed}: {report.describe()}")
+            failed |= not report.ok
+            continue
         trace = out / f"trace_seed{seed}.jsonl"
         record_trace(seeded_programs(seed, n=args.programs), trace)
         report = run_differential(load_trace(trace))

@@ -168,6 +168,68 @@ def generate_programs(spec: WorkloadSpec, n: int, rate_jps: float,
     return out
 
 
+def generate_skewed_programs(spec: WorkloadSpec, n: int, rate_jps: float,
+                             seed: int = 0, *, tenants: int = 4,
+                             tenant_skew: float = 1.2,
+                             share_ratio: float = 0.2,
+                             storm_frac: float = 0.0,
+                             storm_gap_s: float = 20.0,
+                             churn_frac: float = 0.0,
+                             churn_scale: float = 8.0,
+                             turn_scale: float = 1.0) -> list[Program]:
+    """Skewed multi-tenant arrival pattern — the cluster-routing stressor.
+
+    Multi-replica serving is easy when load is uniform; the regimes where
+    KV-aware placement and migration actually matter are:
+
+    - **hot-tenant skew**: programs belong to ``tenants`` agent templates
+      drawn from a Zipf(``tenant_skew``) distribution, each with its own
+      shared preamble. Most sessions run the hottest template, so its
+      preamble KV (and therefore prefix affinity) concentrates on a few
+      replicas — exactly the herding-vs-cache-heat tension.
+    - **tool-storm bursts**: ``storm_frac`` of the programs run *batch*
+      tools (CI pipelines, cron-fed crawlers) whose duration is a fixed
+      multiple of ``storm_gap_s`` per turn index, identical across the
+      cohort — programs that arrived together keep returning together,
+      turn after turn, and slam their home replicas simultaneously (the
+      thundering-herd case where migrating some returners to idle peers
+      beats queueing them all).
+    - **replica-affinity churn**: ``churn_frac`` of the programs alternate
+      short and very long (``churn_scale``×) tool calls. Long absences
+      expire TTL pins and demote KV to the tiers, so these programs keep
+      returning to a *cold* home — the population for which the
+      migrate-vs-reload-vs-recompute decision is genuinely three-way.
+
+    Deterministic for a given seed (the base fleet reuses
+    :func:`generate_programs` with a derived seed, so traces stay
+    byte-stable)."""
+    progs = generate_programs(spec, n=n, rate_jps=rate_jps, seed=seed,
+                              turn_scale=turn_scale, share_ratio=share_ratio,
+                              prefix_groups=1)
+    rng = np.random.default_rng(seed + 0x5EED)
+    tenants = max(tenants, 1)
+    ranks = np.arange(1, tenants + 1, dtype=np.float64)
+    weights = ranks ** -max(tenant_skew, 0.0)
+    weights /= weights.sum()
+    for p in progs:
+        tid = int(rng.choice(tenants, p=weights))
+        if p.shared_prefix_tokens:
+            p.shared_prefix_id = f"{spec.name}/tenant-{tid}"
+        stormy = rng.random() < storm_frac
+        churny = rng.random() < churn_frac
+        for k, t in enumerate(p.turns):
+            if t.tool is None:
+                continue
+            if churny and k % 2 == 1:
+                t.tool_duration *= churn_scale
+            if stormy:
+                # batch tools: duration is a fixed multiple of the storm
+                # gap, identical across the cohort for the same turn
+                # index -> programs that arrived together return together
+                t.tool_duration = storm_gap_s * (1 + k % 3)
+    return progs
+
+
 def request_for_turn(p: Program, turn_idx: int, arrival: float) -> Request:
     t = p.turns[turn_idx]
     dur = t.tool_duration

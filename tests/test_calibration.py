@@ -1,0 +1,97 @@
+"""Hardware auto-calibration from ShadowClockBackend's measured-vs-
+analytic step-duration gap (ROADMAP follow-up (d))."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.serving.profiler import (CostModel, HardwareProfile,
+                                    ModelServingProfile, StepSample,
+                                    calibrate_hardware, step_gap)
+
+
+def make_prof():
+    return ModelServingProfile(
+        param_bytes=2e9, active_param_bytes=2e9,
+        kv_bytes_per_token=4e4, state_bytes=0.0,
+        flops_per_token=2e9, chips=1)
+
+
+def synth_samples(prof, hw_true, rng, n=40):
+    """Steps 'measured' under hw_true, to be recovered from hw_wrong."""
+    cost = CostModel(prof, hw_true)
+    out = []
+    for _ in range(n):
+        p = int(rng.integers(0, 3) > 0) * int(rng.integers(64, 2048))
+        d = int(rng.integers(0, 12))
+        ctx = int(rng.integers(128, 4096))
+        if p == 0 and d == 0:
+            d = 1
+        out.append(StepSample(
+            measured_s=cost.step_seconds(p, 0, d, ctx),
+            prefill_tokens=p, prefill_context=0,
+            decode_batch=d, decode_avg_context=ctx))
+    return out
+
+
+class TestCalibrateHardware:
+    def test_recovers_true_efficiencies(self):
+        prof = make_prof()
+        hw_true = HardwareProfile(flops=1e12, hbm_bw=1e11, mfu=0.35,
+                                  decode_eff=0.6)
+        hw_wrong = dataclasses.replace(hw_true, mfu=0.9, decode_eff=0.2)
+        samples = synth_samples(prof, hw_true, np.random.default_rng(0))
+        cal = calibrate_hardware(samples, prof, hw_wrong)
+        assert cal.mfu == pytest.approx(0.35, rel=0.05)
+        assert cal.decode_eff == pytest.approx(0.6, rel=0.05)
+        assert step_gap(samples, prof, cal) < \
+            0.05 * step_gap(samples, prof, hw_wrong)
+
+    def test_never_worse_than_input(self):
+        prof = make_prof()
+        hw = HardwareProfile(flops=1e12, hbm_bw=1e11)
+        samples = synth_samples(prof, hw, np.random.default_rng(1), n=10)
+        cal = calibrate_hardware(samples, prof, hw)
+        assert step_gap(samples, prof, cal) <= \
+            step_gap(samples, prof, hw) + 1e-12
+
+    def test_empty_samples_noop(self):
+        prof = make_prof()
+        hw = HardwareProfile()
+        assert calibrate_hardware([], prof, hw) is hw
+
+    def test_outliers_trimmed_from_fit(self):
+        prof = make_prof()
+        hw_true = HardwareProfile(flops=1e12, hbm_bw=1e11, mfu=0.4,
+                                  decode_eff=0.5)
+        hw_wrong = dataclasses.replace(hw_true, mfu=0.8, decode_eff=0.25)
+        samples = synth_samples(prof, hw_true, np.random.default_rng(2))
+        # a JIT-compile warmup step: hugely inflated measurement
+        warm = samples[0]
+        samples[0] = dataclasses.replace(warm,
+                                         measured_s=warm.measured_s * 1e4)
+        cal = calibrate_hardware(samples, prof, hw_wrong)
+        assert cal.mfu == pytest.approx(0.4, rel=0.1)
+        assert cal.decode_eff == pytest.approx(0.5, rel=0.1)
+
+
+class TestShadowClockCalibration:
+    """Integration (ROADMAP (d)): a physical replay leg records real step
+    durations; the calibrated profile must shrink the wall-clock gap on
+    that recorded trace."""
+
+    def test_calibrate_shrinks_gap_on_recorded_trace(self):
+        from repro.sim.replay import ReplayConfig, run_engine, \
+            seeded_programs
+        rc = ReplayConfig()
+        _, eng = run_engine(seeded_programs(0, n=3), rc, physical=True)
+        backend = eng.backend
+        assert len(backend.samples) > 10
+        before = step_gap(backend.samples, backend.cost.prof,
+                          backend.cost.hw)
+        hw_cal = backend.calibrate()
+        after = step_gap(backend.samples, backend.cost.prof, hw_cal)
+        assert after < before              # the gap genuinely shrinks
+        # same flops/bandwidth peaks: only the efficiencies moved
+        assert hw_cal.flops == backend.cost.hw.flops
+        assert hw_cal.hbm_bw == backend.cost.hw.hbm_bw

@@ -1,0 +1,337 @@
+"""Cluster serving: KV-aware routing, cross-replica migration over the
+PeerLink, conservation fuzz, and byte-level determinism."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.policies import StaticTTLPolicy
+from repro.core.ttl import TTLModel
+from repro.core.types import Request
+from repro.serving.cluster import (Cluster, ClusterConfig, build_cluster)
+from repro.serving.engine import Engine, EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.prefix import PrefixConfig
+from repro.serving.profiler import HardwareProfile
+from repro.sim.replay import (ReplayConfig, cluster_programs,
+                              run_cluster_replay, run_cluster_trace)
+from repro.sim.workload import BFCL, generate_programs
+
+
+def make_cluster(n=3, router="kv_aware_migrate", ssd=4e9, **ccfg_kw):
+    arch = get_config("qwen2-1.5b")
+    ecfg = EngineConfig(policy="continuum", chips=2, kv_budget_bytes=2e9,
+                        max_batch=8, chunk_size=1024,
+                        offload=OffloadConfig(dram_bytes=3e9, ssd_bytes=ssd),
+                        prefix=PrefixConfig())
+    ccfg = ClusterConfig(n_replicas=n, router=router, **ccfg_kw)
+    return build_cluster(arch, ecfg, ccfg)
+
+
+def drain(engine, now=0.0, limit=200):
+    """Step an engine until idle; returns the virtual time afterwards."""
+    for _ in range(limit):
+        ev = engine.step(now)
+        if ev.idle:
+            break
+        now += max(ev.duration, 1e-3)
+    return now
+
+
+class TestPeerChannels:
+    def test_attach_and_serial_queueing(self):
+        c = make_cluster(2)
+        te = c.engines[0].kvstore.transfer
+        assert te.peer_out is not None and te.peer_in is not None
+        t1 = te.send_peer(1e9, now=0.0)
+        t2 = te.send_peer(1e9, now=0.0)
+        assert t2.start >= t1.end          # serializes on the NIC
+        assert "peer_out" in te.usage()
+
+    def test_link_eta_matches_commit(self):
+        c = make_cluster(2)
+        link = c.links[(0, 1)]
+        eta = link.eta(5e8, now=1.0, staged_ready=2.0)
+        m = link.send("p", 100, 5e8, now=1.0, staged_ready=2.0)
+        assert m.arrive == pytest.approx(eta)
+        assert link.in_flight(m.arrive - 1e-6) and not link.in_flight(m.arrive)
+
+
+class TestMigration:
+    def _finish_one_program(self, cluster, pid="pA", pin=True):
+        """Run a 2-turn program's first turn on r0; leave its KV pinned
+        (static TTL) or demoted into r0's store (vllm retention)."""
+        e = cluster.engines[0]
+        if pin:
+            e.scheduler.policy = StaticTTLPolicy(ttl=1e9)
+        req = Request(pid, 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
+        e.submit(req, 0.0)
+        now = drain(e)
+        cluster.clock.advance(now)
+        return now
+
+    def test_migrate_pinned_program(self):
+        c = make_cluster(3)
+        now = self._finish_one_program(c, pin=True)
+        src, dst = c.engines[0], c.engines[1]
+        assert "pA" in src.scheduler.pinned
+        eta = c.migration_eta("pA", 0, 1, now)
+        assert 0 < eta < 10.0
+        assert c.migrate("pA", 0, 1, now)
+        # source holds nothing; target entry exists, pinned in flight
+        assert "pA" not in src.scheduler.pinned
+        assert src.kvstore.entries.get("pA") is None
+        entry = dst.kvstore.entries["pA"]
+        assert entry.pinned and entry.dram_ready > now
+        # exactly one location: the link while in flight, then the target
+        assert c.residency("pA", now) == ["link:r0->r1"]
+        c.clock.advance(entry.dram_ready + 1e-6)
+        assert c.residency("pA", c.clock.now) == ["r1"]
+        assert not entry.pinned            # pump released the flight pin
+        assert c.violations(c.clock.now) == []
+
+    def test_migrated_entry_reload_waits_for_arrival(self):
+        c = make_cluster(3)
+        now = self._finish_one_program(c, pin=True)
+        assert c.migrate("pA", 0, 1, now)
+        dst = c.engines[1]
+        entry = dst.kvstore.entries["pA"]
+        flight_left = entry.dram_ready - now
+        secs = dst.kvstore.reload_seconds("pA", now)
+        assert secs >= flight_left         # reload can't beat the wire
+
+    def test_migrate_store_entry(self):
+        c = make_cluster(3)
+        e = c.engines[0]
+        e.scheduler.policy = StaticTTLPolicy(ttl=0.0)   # demote at finish
+        req = Request("pB", 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
+        e.submit(req, 0.0)
+        now = drain(e)
+        c.clock.advance(now)
+        assert e.kvstore.entries.get("pB") is not None
+        assert c.migrate("pB", 0, 2, now)
+        assert e.kvstore.entries.get("pB") is None
+        assert c.engines[2].kvstore.entries.get("pB") is not None
+        assert c.violations(c.clock.now) == []
+
+    def test_can_land_denies_when_full(self):
+        c = make_cluster(2, ssd=0.0)
+        st = c.engines[1].kvstore
+        st.dram_used_blocks = st.cfg.dram_blocks      # artificially full
+        assert not c.can_land(1, 1e6)
+        now = self._finish_one_program(c, pin=True)
+        assert not c.migrate("pA", 0, 1, now)
+        assert c.stats.migration_denied == 1
+        assert "pA" in c.engines[0].scheduler.pinned  # source untouched
+
+    def test_migrate_pin_with_stale_store_entry(self):
+        """A radix-tie admission can leave an unconsumed tier entry
+        coexisting with the next pin; migrating the pin must not leave
+        that stale copy behind (double residency)."""
+        c = make_cluster(3)
+        now = self._finish_one_program(c, pin=True)
+        src = c.engines[0]
+        src.kvstore.put("pA", 100,
+                        100 * src.scheduler._kv_bytes_per_token, now=now)
+        assert "pA" in src.scheduler.pinned
+        assert src.kvstore.entries.get("pA") is not None
+        assert c.migrate("pA", 0, 1, now)
+        assert src.kvstore.entries.get("pA") is None
+        assert len(c.residency("pA", now)) == 1
+        assert c.violations(now) == []
+
+    def test_rehome_of_inflight_entry_reads_dropped_not_lost(self):
+        """Dropping / re-homing an entry whose inbound migration is still
+        on the wire closes its ledger record instead of reporting the KV
+        lost in flight."""
+        c = make_cluster(3)
+        now = self._finish_one_program(c, pin=True)
+        assert c.migrate("pA", 0, 1, now)
+        assert c.residency("pA", now) == ["link:r0->r1"]
+        c.drop_replica_kv("pA", 1, now)      # before the flight lands
+        assert c.residency("pA", now) == []
+        assert c.violations(now) == []
+
+    def test_drop_replica_kv_removes_everything(self):
+        c = make_cluster(2)
+        now = self._finish_one_program(c, pin=True)
+        dropped = c.drop_replica_kv("pA", 0, now)
+        assert dropped > 0
+        assert c.residency("pA", now) == []
+
+
+class TestClusterRouter:
+    def test_round_robin_never_double_resident(self):
+        c = make_cluster(3, router="round_robin", check_each_step=True)
+        progs = generate_programs(BFCL, n=10, rate_jps=0.5, seed=1)
+        s = c.run(progs, max_seconds=1e6)
+        assert s.n_programs == 10
+        assert c.violations(c.clock.now) == []
+
+    def test_sticky_keeps_home(self):
+        c = make_cluster(3, router="sticky")
+        r1 = c.router.route(Request("pX", 0, 100, 4, 0.0, 0.0))
+        r2 = c.router.route(Request("pX", 1, 200, 4, 5.0, 0.0))
+        assert r1 is r2
+
+    def test_kv_aware_migrates_from_congested_home(self):
+        c = make_cluster(3, router="kv_aware_migrate")
+        e0 = c.engines[0]
+        e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
+        req = Request("pH", 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
+        c.router.session_map["pH"] = 0
+        e0.submit(req, 0.0)
+        now = drain(e0)
+        c.clock.advance(now)
+        # congest the home with waiting work; peers stay idle
+        for i in range(30):
+            e0.scheduler.waiting.append(
+                Request(f"w{i}", 0, 4000, 64, now, now))
+        target = c.router.route(Request("pH", 1, 900, 4, now, 0.0))
+        assert target is not e0            # left the congested home
+        assert c.stats.migrations == 1     # ...and took its KV along
+        assert c.violations(c.clock.now) == []
+
+    def test_kv_aware_no_migration_rehomes_cold(self):
+        c = make_cluster(3, router="kv_aware")
+        e0 = c.engines[0]
+        e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
+        req = Request("pC", 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
+        c.router.session_map["pC"] = 0
+        e0.submit(req, 0.0)
+        now = drain(e0)
+        c.clock.advance(now)
+        for i in range(30):
+            e0.scheduler.waiting.append(
+                Request(f"w{i}", 0, 4000, 64, now, now))
+        target = c.router.route(Request("pC", 1, 900, 4, now, 0.0))
+        assert target is not e0
+        assert c.stats.migrations == 0 and c.stats.cold_rehomes == 1
+        assert c.residency("pC", c.clock.now) == []   # dropped, not moved
+
+    def test_hysteresis_keeps_marginal_wins_home(self):
+        c = make_cluster(2, router="kv_aware_migrate",
+                         migrate_min_gain_s=1e9)
+        e0 = c.engines[0]
+        e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
+        c.router.session_map["pM"] = 0
+        e0.submit(Request("pM", 0, 640, 4, 0.0, 0.0, tool="t",
+                          tool_duration=5.0), 0.0)
+        now = drain(e0)
+        c.clock.advance(now)
+        for i in range(30):
+            e0.scheduler.waiting.append(
+                Request(f"w{i}", 0, 4000, 64, now, now))
+        assert c.router.route(Request("pM", 1, 900, 4, now, 0.0)) is e0
+
+
+class TestQueueEtaTTL:
+    def test_solve_uses_queue_eta_over_tbar(self):
+        m = TTLModel()
+        for _ in range(200):
+            m.observe_tool("t", 1.0)
+        m.observe_queueing_delay(0.0)      # fleet average says no delay
+        base = m.solve("t", prefill_reload=0.0)
+        assert base.ttl == 0.0             # nothing to gain
+        busy = m.solve("t", prefill_reload=0.0, queue_eta=50.0)
+        assert busy.ttl > 0.0              # local congestion justifies a pin
+        assert busy.t_bar == pytest.approx(50.0)
+
+    def test_engine_queue_eta_monotone_in_load(self):
+        arch = get_config("qwen2-1.5b")
+        e = Engine(arch, EngineConfig(chips=2, kv_budget_bytes=2e9),
+                   HardwareProfile())
+        empty = e.queue_eta(0.0)
+        assert empty == 0.0
+        for i in range(5):
+            e.scheduler.waiting.append(Request(f"q{i}", 0, 2000, 32, 0.0, 0.0))
+        assert e.queue_eta(0.0) > 0.0
+
+
+class TestConservationFuzz:
+    """Randomized interleavings of migrate/preempt/demote/finish across
+    >=3 replicas: every program's KV resident on exactly one replica (or
+    in flight on exactly one PeerLink), per-replica pool invariants hold
+    at every step boundary (check_each_step asserts inside the run)."""
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3])
+    def test_fuzz_kv_aware_migrate(self, seed):
+        rng = np.random.default_rng(seed)
+        c = make_cluster(3 + int(rng.integers(0, 2)),
+                         router="kv_aware_migrate",
+                         ssd=float(rng.choice([0.0, 2e9])),
+                         check_each_step=True)
+        progs = cluster_programs(seed, n=10)
+        s = c.run(progs, max_seconds=1e6)
+        assert s.n_programs >= 10
+        assert c.violations(c.clock.now) == []
+
+    @pytest.mark.parametrize("router", ["round_robin", "kv_aware"])
+    def test_fuzz_other_policies(self, router):
+        c = make_cluster(3, router=router, check_each_step=True)
+        progs = cluster_programs(7, n=10)
+        c.run(progs, max_seconds=1e6)
+        assert c.violations(c.clock.now) == []
+
+    def test_fuzz_exercises_migration(self):
+        # the replay config's deliberately slow virtual chip creates the
+        # congestion that makes migration worthwhile
+        progs = cluster_programs(0, n=12)
+        _, viol, cluster = run_cluster_trace(progs, ReplayConfig(),
+                                             replicas=3)
+        assert viol == []
+        assert cluster.stats.migrations > 0    # the fuzz isn't vacuous
+
+
+class TestClusterDeterminism:
+    def test_same_seed_byte_identical_trace(self):
+        progs = cluster_programs(3, n=8)
+        report = run_cluster_replay(progs, ReplayConfig(), replicas=3)
+        assert report.ok, report.describe()
+        assert report.conservation_violations == 0
+
+    def test_trace_records_replica_ids(self):
+        progs = cluster_programs(1, n=6)
+        lines, viol, cluster = run_cluster_trace(progs, ReplayConfig(),
+                                                 replicas=3)
+        assert viol == []
+        replicas = {json.loads(l).get("replica") for l in lines
+                    if json.loads(l)["ev"] == "step"}
+        assert len(replicas) >= 2          # work actually spread
+        for l in lines:
+            d = json.loads(l)
+            assert d["ev"] in ("step", "migrate", "rehome_drop")
+            if d["ev"] in ("step", "rehome_drop"):
+                assert d["replica"].startswith("r")
+
+
+class TestSkewedWorkload:
+    def test_deterministic(self):
+        from repro.sim.workload import SWE_BENCH, generate_skewed_programs
+        a = generate_skewed_programs(SWE_BENCH, n=12, rate_jps=1.0, seed=5,
+                                     storm_frac=0.5, churn_frac=0.3)
+        b = generate_skewed_programs(SWE_BENCH, n=12, rate_jps=1.0, seed=5,
+                                     storm_frac=0.5, churn_frac=0.3)
+        assert [(p.program_id, p.arrival_time, p.shared_prefix_id,
+                 [t.tool_duration for t in p.turns]) for p in a] == \
+               [(p.program_id, p.arrival_time, p.shared_prefix_id,
+                 [t.tool_duration for t in p.turns]) for p in b]
+
+    def test_tenant_skew_concentrates(self):
+        from repro.sim.workload import SWE_BENCH, generate_skewed_programs
+        progs = generate_skewed_programs(SWE_BENCH, n=60, rate_jps=1.0,
+                                         seed=0, tenants=4, tenant_skew=2.0)
+        counts = {}
+        for p in progs:
+            counts[p.shared_prefix_id] = counts.get(p.shared_prefix_id, 0) + 1
+        assert max(counts.values()) > len(progs) / 2   # a hot tenant exists
+
+    def test_storm_cohort_synchronized(self):
+        from repro.sim.workload import SWE_BENCH, generate_skewed_programs
+        progs = generate_skewed_programs(SWE_BENCH, n=40, rate_jps=1.0,
+                                         seed=0, storm_frac=1.0,
+                                         storm_gap_s=10.0, churn_frac=0.0)
+        for p in progs:
+            for k, t in enumerate(p.turns[:-1]):
+                assert t.tool_duration == 10.0 * (1 + k % 3)

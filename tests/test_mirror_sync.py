@@ -1,0 +1,188 @@
+"""Accounting-index radix evictions propagate to the backend's
+page-stamped mirror (ROADMAP follow-up (e)).
+
+The scheduler's accounting radix index and the physical backend's
+page-stamped mirror are built from the same insert stream, but used to
+evict independently: accounting under block pressure, the mirror only
+under physical page pressure. The mirror could therefore keep pages for
+paths accounting had freed, and its own LRU would later evict *different*
+paths the scheduler still serves — surfacing as ``shortfall_tokens``
+defensive recomputes. ``RadixPrefixIndex.evict_chain`` +
+``JaxModelBackend.drop_prefix_chain`` close the loop: the engine wires
+``on_evict_node`` of the accounting index to drop the same hash chain
+from the mirror."""
+import pytest
+
+from repro.serving.blocks import BlockConfig, BlockManager
+from repro.serving.prefix import PrefixConfig, RadixPrefixIndex
+
+
+def chain(tag, n):
+    """A deterministic hash chain of length n (chained like
+    request_block_hashes)."""
+    h, out = 0x5EED, []
+    for i in range(n):
+        h = hash((h, (tag, i)))
+        out.append(h)
+    return tuple(out)
+
+
+def shared_chain(shared_n, tag, total_n):
+    """Chain whose first shared_n hashes come from a shared stream."""
+    h, out = 0x5EED, []
+    for i in range(total_n):
+        key = ("shared", i) if i < shared_n else (tag, i)
+        h = hash((h, key))
+        out.append(h)
+    return tuple(out)
+
+
+class TestEvictChain:
+    def make(self):
+        return RadixPrefixIndex(PrefixConfig(block_size=16))
+
+    def test_drops_exact_chain(self):
+        idx = self.make()
+        hs = chain("a", 8)
+        _, _, node = idx.insert(hs, None, 0, 0.0)
+        idx.release(node)
+        assert idx.cached_blocks() == 8
+        assert idx.evict_chain(hs, keep_blocks=0) == 8
+        assert idx.cached_blocks() == 0
+
+    def test_keep_blocks_preserves_head(self):
+        idx = self.make()
+        hs = chain("a", 8)
+        _, _, node = idx.insert(hs, None, 0, 0.0)
+        idx.release(node)
+        assert idx.evict_chain(hs, keep_blocks=3) == 5
+        assert idx.cached_blocks() == 3
+        assert idx.match_blocks(hs) == 3    # the kept head still matches
+
+    def test_respects_refcounts(self):
+        idx = self.make()
+        hs = chain("a", 8)
+        _, _, node = idx.insert(hs, None, 0, 0.0)   # still locked
+        assert idx.evict_chain(hs) == 0
+        idx.release(node)
+        assert idx.evict_chain(hs) == 8
+
+    def test_never_touches_divergent_siblings(self):
+        idx = self.make()
+        a = shared_chain(4, "a", 8)
+        b = shared_chain(4, "b", 8)
+        _, _, na = idx.insert(a, None, 0, 0.0)
+        _, _, nb = idx.insert(b, None, 0, 1.0)
+        idx.release(na)
+        idx.release(nb)
+        # evicting a's chain may only free a's unique suffix: the shared
+        # head has b's live continuation below it
+        freed = idx.evict_chain(a, keep_blocks=0)
+        assert freed == 4
+        assert idx.match_blocks(b) == 8     # b fully intact
+
+    def test_longer_cached_extension_is_isolated_not_freed(self):
+        idx = self.make()
+        long = chain("a", 10)
+        _, _, node = idx.insert(long, None, 0, 0.0)
+        idx.release(node)
+        # evicting the 6-block prefix chain must not free blocks [6..10)
+        freed = idx.evict_chain(long[:6], keep_blocks=0)
+        assert freed == 0                   # extension still cached below
+        assert idx.match_blocks(long) == 10
+
+    def test_cross_tree_propagation(self):
+        """The engine wiring in miniature: accounting evictions drop the
+        same chain from a differently-split mirror tree."""
+        blocks = BlockManager(BlockConfig(total_blocks=64, block_size=16))
+        acct = RadixPrefixIndex(PrefixConfig(block_size=16), blocks)
+        mirror = RadixPrefixIndex(PrefixConfig(block_size=16))
+        acct.on_evict_node = lambda n: mirror.evict_chain(
+            n.path_hashes(), n.depth_blocks() - n.n_blocks)
+        hs = chain("p", 6)
+        blocks.allocate(1, 6)
+        _, _, node = acct.insert(hs, None, 0, 0.0)
+        blocks.to_shared(1, 6)
+        acct.release(node)
+        # the mirror inserted the same chain but split differently
+        _, _, m1 = mirror.insert(hs[:2], None, 0, 0.0)
+        mirror.release(m1)
+        _, _, m2 = mirror.insert(hs, None, 0, 1.0)
+        mirror.release(m2)
+        assert mirror.cached_blocks() == 6
+        assert acct.evict(6) == 6
+        assert mirror.cached_blocks() == 0  # drift eliminated
+
+
+class TestMirrorDriftRegression:
+    """End-to-end: force the drift the wiring eliminates. A published,
+    unreferenced chain is evicted from the scheduler's accounting index;
+    the backend's mirror must free the same physical pages. (Before the
+    fix the mirror kept them until its own page-pressure LRU picked
+    possibly different victims.)"""
+
+    def _build(self):
+        import jax
+        from repro.configs import get_config
+        from repro.core.ttl import TTLConfig
+        from repro.serving.backend import JaxModelBackend
+        from repro.serving.engine import Engine, EngineConfig
+        from repro.serving.prefix import PrefixConfig as PC
+        from repro.serving.profiler import HardwareProfile
+        cfg = get_config("qwen2-1.5b", smoke=True)
+        backend = JaxModelBackend(cfg, rng=jax.random.PRNGKey(0),
+                                  max_len=256, page_size=16)
+        ecfg = EngineConfig(max_batch=4, chunk_size=128, block_size=16,
+                            kv_budget_bytes=96 * 16 *
+                            backend.runtime.cfg.kv_bytes_per_token(2),
+                            prefix=PC(), ttl=TTLConfig(max_ttl=0.0))
+        eng = Engine(cfg, ecfg, HardwareProfile(), backend=backend)
+        return eng, backend
+
+    def test_accounting_evict_frees_mirror_pages(self):
+        from repro.core.types import Request
+        eng, backend = self._build()
+        rt = backend.runtime
+        free0 = len(rt.free)
+        req = Request("prog", 0, 96, 2, 0.0, 0.0)
+        eng.submit(req, 0.0)
+        now = 0.0
+        for _ in range(50):
+            ev = eng.step(now)
+            if ev.idle:
+                break
+            now += max(ev.duration, 1e-3)
+        # program finished without retention: its prompt chain is cached,
+        # unreferenced, in BOTH trees (accounting + page-stamped mirror)
+        acct_blocks = eng.prefix_index.cached_blocks()
+        assert acct_blocks > 0
+        assert backend.prefix_index.cached_blocks() >= acct_blocks
+        held_pages = rt.n_pages - len(rt.free)
+        assert held_pages >= acct_blocks    # mirror pins physical pages
+        # accounting eviction (the admit/decode reclaim path)
+        freed = eng.scheduler.prefix_reclaim(acct_blocks)
+        assert freed == acct_blocks
+        # ...must free the mirror's pages too, not wait for page pressure
+        assert backend.prefix_index.cached_blocks() == 0
+        assert len(rt.free) == free0        # every page back on the list
+        rt.check(backend.prefix_index)
+
+    def test_drift_without_wiring(self):
+        """The red half: severing the wiring reproduces the old drift —
+        accounting evicts, the mirror keeps holding pages."""
+        eng, backend = self._build()
+        eng.prefix_index.on_evict_node = None      # pre-fix behavior
+        from repro.core.types import Request
+        rt = backend.runtime
+        free0 = len(rt.free)
+        eng.submit(Request("prog", 0, 96, 2, 0.0, 0.0), 0.0)
+        now = 0.0
+        for _ in range(50):
+            ev = eng.step(now)
+            if ev.idle:
+                break
+            now += max(ev.duration, 1e-3)
+        acct_blocks = eng.prefix_index.cached_blocks()
+        eng.scheduler.prefix_reclaim(acct_blocks)
+        assert backend.prefix_index.cached_blocks() > 0   # the drift
+        assert len(rt.free) < free0
