@@ -85,7 +85,11 @@ def run_one(policy: str, *, workload="swe-bench", n=60, rate=0.05, seed=0,
 
 
 def save_rows(name: str, rows: list[dict]) -> Path:
+    """Write a bench result as both ``<name>.csv`` (plots, eyeballs) and
+    ``<name>.json`` (tooling: typed values, stable key order) under
+    experiments/bench/."""
     import csv
+    import json
     RESULTS_DIR.mkdir(parents=True, exist_ok=True)
     path = RESULTS_DIR / f"{name}.csv"
     if rows:
@@ -94,6 +98,9 @@ def save_rows(name: str, rows: list[dict]) -> Path:
             w = csv.DictWriter(f, fieldnames=fields, restval="")
             w.writeheader()
             w.writerows(rows)
+        (RESULTS_DIR / f"{name}.json").write_text(
+            json.dumps({"bench": name, "rows": rows},
+                       indent=2, sort_keys=True) + "\n")
     return path
 
 

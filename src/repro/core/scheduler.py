@@ -67,6 +67,9 @@ class SchedulerStats:
     recompute_seconds: float = 0.0  # est. prefill time paid by full recomputes
     demotions: int = 0             # TTL expiries demoted to a lower tier
                                    # (instead of dropped)
+    reload_tokens: int = 0         # prompt tokens served by tier reloads
+    recompute_tokens: int = 0      # prompt tokens re-prefilled because the
+                                   # KV was gone (turn > 0, no cache source)
 
 
 class Scheduler:
@@ -99,13 +102,24 @@ class Scheduler:
         # reload, preempt) is appended as a tuple — the differential
         # replay harness compares these streams across backends
         self.decision_sink: Optional[list] = None
+        # telemetry plane (repro.obs.Telemetry) — None keeps _log at a
+        # single attribute test; `now` shadows the last clock value any
+        # public entry point saw, so _log can timestamp decisions made
+        # deep inside call chains that don't thread `now`
+        self.obs = None
+        self.obs_replica = "engine0"
+        self.now = 0.0
 
     def _log(self, kind: str, program_id: str, *info) -> None:
         if self.decision_sink is not None:
             self.decision_sink.append((kind, program_id) + info)
+        if self.obs is not None:
+            self.obs.decision(self.obs_replica, kind, program_id, info,
+                              self.now)
 
     # ----------------------------------------------------------- Algorithm 1
     def on_request_arrive(self, req: Request, now: float) -> None:
+        self.now = now
         req.state = RequestState.WAITING
         self.waiting.append(req)
         # seen program: close the tool-call interval (S[f] <- duration)
@@ -115,6 +129,7 @@ class Scheduler:
     def on_request_finish(self, req: Request, now: float) -> dict:
         """Returns {"pinned": bool, "ttl": float}. Engine already marked the
         request finished and owns its block allocation."""
+        self.now = now
         req.state = RequestState.FINISHED
         req.finish_time = now
         tool = self.handler.identify_tool(req)
@@ -130,6 +145,11 @@ class Scheduler:
             return {"pinned": False, "ttl": 0.0}
 
         self.handler.func_call_finish(tool, now, req.program_id)
+        if self.obs is not None:
+            # stage the solve context: the TTL model itself knows neither
+            # the program nor the clock (see repro.obs.audit)
+            self.obs.audit.begin_solve(req.program_id, tool, req.turn_idx,
+                                       now, replica=self.obs_replica)
         decision = self.policy.retention(req, tool, self.handler)
         if decision.ttl > 0:
             n = self.blocks.pin(req.request_id, req.program_id)
@@ -164,6 +184,7 @@ class Scheduler:
         offload-demote ``tokens`` of the program's HBM KV if a tier will
         take them (``tokens=0`` = nothing reloadable, e.g. a final turn),
         then notify the backend demote-vs-evict. Returns demoted."""
+        self.now = now
         demoted = False
         if self.offload is not None and tokens > 0:
             demoted = self.offload.offload(
@@ -203,6 +224,7 @@ class Scheduler:
         flight) or is genuinely dropped (``keep_copy=False``, the
         recompute-elsewhere decision). Returns the pinned token count
         (0 = no pin held here)."""
+        self.now = now
         e = self.pinned.pop(program_id, None)
         if e is None:
             return 0
@@ -385,6 +407,7 @@ class Scheduler:
             req.cached_prefix = cached
             self.stats.offload_reloads += 1
             self.stats.reload_seconds += req.reload_seconds
+            self.stats.reload_tokens += cached
             self._log("reload", req.program_id,
                       round(req.reload_seconds, 9), cached)
             if self.on_reload is not None:
@@ -397,6 +420,7 @@ class Scheduler:
             req.reload_seconds = 0.0
             if req.turn_idx > 0:
                 self.stats.full_recomputes += 1
+                self.stats.recompute_tokens += req.prompt_len
                 if self.recompute_estimate_fn is not None:
                     self.stats.recompute_seconds += \
                         self.recompute_estimate_fn(req.prompt_len)
@@ -461,6 +485,7 @@ class Scheduler:
                  admit_hook: Callable[[Request], None] | None = None) -> list[Request]:
         """Algorithm 1 Schedule(): admit from Q by priority until memory or
         queue is exhausted. Returns the admitted requests."""
+        self.now = now
         self.unpin_expired(now)
         admitted: list[Request] = []
         while self.waiting and len(admitted) < max_admits:

@@ -96,6 +96,10 @@ class ToolCallHandler:
         self.queue_eta_fn: Optional[Callable[[], float]] = None
         self._pending: dict[str, _PendingTool] = {}     # program_id -> tool
         self.seen_programs: set[str] = set()
+        # telemetry plane: observed tool durations (the S[f] feed) land
+        # on the replica's trace lane; None = no-op
+        self.obs = None
+        self.obs_replica = "engine0"
 
     # ------------------------------------------------------------- parsing
     @staticmethod
@@ -127,6 +131,11 @@ class ToolCallHandler:
         pend = self._pending.pop(program_id, None)
         if pend is not None:
             self.ttl_model.observe_tool(pend.tool, timestamp - pend.finish_ts)
+            if self.obs is not None:
+                self.obs.trace.instant(
+                    self.obs_replica, "tool_duration", timestamp, cat="ttl",
+                    args={"program": program_id, "tool": pend.tool,
+                          "duration": round(timestamp - pend.finish_ts, 9)})
         self.seen_programs.add(program_id)
 
     def set_up_ttl(self, req: Request, tool: str) -> TTLDecision:

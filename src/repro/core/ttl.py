@@ -149,6 +149,9 @@ class TTLModel:
         self.eta_est = MemoryfulnessEstimator(cfg.eta_default, cfg.eta_min_programs)
         self.t_bar = SlidingMean(cfg.window, init=0.0)    # avg queueing delay
         self.m_bar = SlidingMean(cfg.window, init=1.0)    # avg mem per request
+        # telemetry: a repro.obs.audit.TTLAudit records every solve's
+        # inputs and output; None (the default) costs one attribute test
+        self.audit = None
 
     # ---- feeds ----------------------------------------------------------
     def observe_tool(self, tool: str, duration: float) -> None:
@@ -179,6 +182,16 @@ class TTLModel:
 
     def solve(self, tool: Optional[str], prefill_reload: float,
               queue_eta: Optional[float] = None) -> TTLDecision:
+        dec = self._solve(tool, prefill_reload, queue_eta)
+        if self.audit is not None:
+            self.audit.record_solve(
+                tool, prefill_reload, queue_eta, dec,
+                n_tool=self.records.count(tool) if tool else 0,
+                n_global=self.records.count(None))
+        return dec
+
+    def _solve(self, tool: Optional[str], prefill_reload: float,
+               queue_eta: Optional[float] = None) -> TTLDecision:
         cfg = self.cfg
         G = self._gain_term(prefill_reload, queue_eta)
         eta = self.eta_est.eta
@@ -235,6 +248,16 @@ class TTLModel:
         if len(tools) <= 1:
             return self.solve(tools[0] if tools else None, prefill_reload,
                               queue_eta)
+        dec = self._solve_parallel(tools, prefill_reload, queue_eta)
+        if self.audit is not None:
+            self.audit.record_solve(
+                "par:" + "+".join(sorted(tools)), prefill_reload, queue_eta,
+                dec, n_tool=min(self.records.count(f) for f in tools),
+                n_global=self.records.count(None))
+        return dec
+
+    def _solve_parallel(self, tools: list[str], prefill_reload: float,
+                        queue_eta: Optional[float] = None) -> TTLDecision:
         cfg = self.cfg
         G = self._gain_term(prefill_reload, queue_eta)
         if self.records.count(None) <= cfg.cold_start_k:

@@ -50,6 +50,16 @@ def main() -> int:
                     help="roofline: calibrate the TTL cost model from the "
                          "compiled HLO of the real config (lower+compile "
                          "only — scanned layers keep it seconds on CPU)")
+    ap.add_argument("--trace-out",
+                    help="write a Perfetto-loadable trace of the run "
+                         "(enables the telemetry plane); the raw event "
+                         "stream lands next to it as <path>.jsonl and "
+                         "the TTL audit as <path>.audit.json")
+    ap.add_argument("--metrics-out",
+                    help="write the Prometheus text exposition of the "
+                         "run's metrics (enables the telemetry plane); "
+                         "a JSON snapshot lands next to it as "
+                         "<path>.json")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -72,8 +82,32 @@ def main() -> int:
         max_batch=args.max_batch, chunk_size=args.chunk_size,
         kv_budget_bytes=args.kv_budget_gb * 1e9), HardwareProfile(),
         cost=cost, engine_id=f"e{i}") for i in range(args.engines)]
+    tel = None
+    if args.trace_out or args.metrics_out:
+        from repro.obs import Telemetry
+        tel = Telemetry()
+        for e in engines:
+            e.attach_telemetry(tel)
     router = Router(engines, policy=args.router)
     s = run_workload(programs, engines, router, max_seconds=1e7)
+    if tel is not None:
+        import pathlib
+        if args.trace_out:
+            from repro.obs import export as obs_export
+            p = pathlib.Path(args.trace_out)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            obs_export.export_file(tel.trace, p)
+            tel.trace.save_jsonl(p.with_suffix(p.suffix + ".jsonl"))
+            p.with_suffix(p.suffix + ".audit.json").write_text(
+                json.dumps(tel.audit.to_json(), indent=2, sort_keys=True)
+                + "\n")
+        if args.metrics_out:
+            p = pathlib.Path(args.metrics_out)
+            p.parent.mkdir(parents=True, exist_ok=True)
+            p.write_text(tel.metrics.exposition())
+            p.with_suffix(p.suffix + ".json").write_text(
+                json.dumps(tel.metrics.snapshot(), indent=2,
+                           sort_keys=True) + "\n")
     st = engines[0].scheduler.stats
     out = {
         "policy": args.policy, "n_programs": s.n_programs,

@@ -81,6 +81,8 @@ class Cluster:
         self.clock = clock or ClusterClock()
         self.stats = ClusterStats()
         self.seen_programs: set[str] = set()
+        # shared telemetry plane (attach_telemetry); None = disabled
+        self.obs = None
         # the single chronological cluster event stream (replay traces):
         # migrate records here, per-step decision records appended by the
         # replay harness's on_step
@@ -121,6 +123,15 @@ class Cluster:
                     lambda _e, _ev, t: self.check(t))
 
     # ------------------------------------------------------------ plumbing
+    def attach_telemetry(self, tel) -> None:
+        """Wire every replica (and the cluster/router lanes) into one
+        shared :class:`~repro.obs.Telemetry` plane. Call after
+        construction — the peer channels already exist by then, so the
+        NIC lanes (``r0/peer_out`` ...) are traced too."""
+        self.obs = tel
+        for e in self.engines:
+            e.attach_telemetry(tel)
+
     def _pump_links(self, now: float) -> None:
         """Arrival pump: migrations whose flight ended become plain target
         tier residents (the in-flight protection pin is released)."""
@@ -246,6 +257,9 @@ class Cluster:
                            "src": src.engine_id, "dst": dst.engine_id,
                            "t": round(now, 9), "arrive": round(m.arrive, 9),
                            "tokens": tokens})
+        if self.obs is not None:
+            self.obs.cluster_migration(pid, src.engine_id, dst.engine_id,
+                                       now, m.arrive, tokens, nbytes)
         return True
 
     def drop_replica_kv(self, pid: str, i: int, now: float) -> int:
@@ -270,6 +284,10 @@ class Cluster:
             self.trace.append({"ev": "rehome_drop", "pid": pid,
                                "replica": e.engine_id,
                                "t": round(now, 9), "tokens": tokens})
+            if self.obs is not None:
+                self.obs.router_event("rehome_drop", pid, now,
+                                      args={"replica": e.engine_id,
+                                            "tokens": tokens})
         return tokens
 
     # -------------------------------------------------------- conservation

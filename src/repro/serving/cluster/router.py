@@ -76,6 +76,7 @@ class ClusterRouter:
     def route(self, req: Request):
         now = self.cluster.clock.now
         pid = req.program_id
+        obs = self.cluster.obs
         self.cluster.seen_programs.add(pid)
         home = self.session_map.get(pid)
         if self.policy == "round_robin":
@@ -86,21 +87,44 @@ class ClusterRouter:
                 # holds is garbage (conservation: drop, don't leak)
                 self.cluster.drop_replica_kv(pid, home, now)
             self.session_map[pid] = idx
+            if obs is not None:
+                obs.router_event("scatter", pid, now,
+                                 args={"replica": self.engines[idx]
+                                       .engine_id, "turn": req.turn_idx})
             return self.engines[idx]
         if home is None:
             idx = self._place_new(req)
             self.session_map[pid] = idx
+            if obs is not None:
+                obs.router_event("place_new", pid, now,
+                                 args={"replica": self.engines[idx]
+                                       .engine_id})
             return self.engines[idx]
         if self.policy == "sticky":
+            if obs is not None:
+                obs.router_event("stay_home", pid, now,
+                                 args={"replica": self.engines[home]
+                                       .engine_id, "turn": req.turn_idx})
             return self.engines[home]
         idx, migrate = self._best_replica(req, home, now)
         if idx != home:
-            if not (migrate and self.cluster.migrate(pid, home, idx, now)):
+            shipped = migrate and self.cluster.migrate(pid, home, idx, now)
+            if not shipped:
                 # recompute-cold re-home (or a denied migration): the old
                 # home's copy is dropped so the KV is never double-resident
                 self.cluster.drop_replica_kv(pid, home, now)
                 self.cluster.stats.cold_rehomes += 1
             self.session_map[pid] = idx
+            if obs is not None:
+                obs.router_event(
+                    "rehome_migrate" if shipped else "rehome_cold", pid,
+                    now, args={"src": self.engines[home].engine_id,
+                               "dst": self.engines[idx].engine_id,
+                               "turn": req.turn_idx})
+        elif obs is not None:
+            obs.router_event("stay_home", pid, now,
+                             args={"replica": self.engines[home].engine_id,
+                                   "turn": req.turn_idx})
         return self.engines[idx]
 
     # ----------------------------------------------------------- placement

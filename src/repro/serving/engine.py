@@ -232,6 +232,17 @@ class Engine:
         self.tokens_prefilled = 0
         self.tokens_decoded = 0
         self.rejected = 0
+        # telemetry plane (attach_telemetry); None = every emission site
+        # short-circuits on one attribute test
+        self.obs = None
+
+    def attach_telemetry(self, tel) -> None:
+        """Wire this replica into a shared :class:`repro.obs.Telemetry`:
+        scheduler decisions, TTL solves, tiered-store moves, transfer
+        channels, the paged runtime, and this engine's gauges all report
+        into it. Call after construction (and, in a cluster, after peer
+        channels are attached so the NIC lanes are wired too)."""
+        tel.attach_engine(self)
 
     # ------------------------------------------------------------------ API
     def submit(self, req: Request, now: float) -> None:
@@ -247,7 +258,14 @@ class Engine:
             req.finish_time = now
             ps.finish_time = now
             self.rejected += 1
+            if self.obs is not None:
+                self.obs.program_end(req.program_id, now, mark="rejected")
             return
+        if self.obs is not None:
+            # opening the queued span also closes a prior tool_pause span
+            self.obs.program_phase(req.program_id, "queued", now,
+                                   args={"turn": req.turn_idx,
+                                         "replica": self.engine_id})
         self.scheduler.on_request_arrive(req, now)
 
     @property
@@ -288,6 +306,7 @@ class Engine:
         ev = StepEvents()
         self.clock = now            # anchors TransferEngine-based pricing
         self.scheduler.decision_sink = ev.decisions
+        self.scheduler.now = now    # timestamps decisions made mid-step
         for hook in self.pre_step_hooks:
             hook(self, now)
         # 1. admission (Algorithm 1 Schedule())
@@ -297,6 +316,13 @@ class Engine:
             for r in admitted:
                 r.prefill_pos = r.cached_prefix
                 self.running.append(r)
+                if self.obs is not None:
+                    # fully-cached prompts (pin adoption) skip prefill
+                    self.obs.program_phase(
+                        r.program_id,
+                        "decode" if r.done_prefill() else "prefill", now,
+                        args={"turn": r.turn_idx,
+                              "cached": r.cached_prefix})
             ev.admitted = admitted
 
         if not self.running:
@@ -352,6 +378,18 @@ class Engine:
         ev.duration = dur
         self.busy_seconds += dur
         self.steps += 1
+        if self.obs is not None:
+            rid = self.engine_id
+            p_tok = sum(w.chunk for w in prefill_work)
+            self.obs.trace.complete(
+                rid, "step", now, dur, cat="step",
+                args={"prefill_tokens": p_tok, "decode": len(decode_reqs),
+                      "running": len(self.running)})
+            self.obs.step_seconds.observe(dur, (rid,))
+            if p_tok:
+                self.obs.tokens.inc(p_tok, (rid, "prefill"))
+            if decode_reqs:
+                self.obs.tokens.inc(len(decode_reqs), (rid, "decode"))
 
         # 5. advance state
         total_tok = sum(w.chunk for w in prefill_work) + len(decode_reqs) or 1
@@ -365,6 +403,8 @@ class Engine:
                 self._note_first_token(w.req, end)
                 # publish the finished prompt into the shared-prefix index
                 self.scheduler.insert_prefix(w.req, end)
+                if self.obs is not None:
+                    self.obs.program_phase(w.req.program_id, "decode", end)
             self.scheduler.note_service(
                 w.req.program_id, dur * w.chunk / total_tok)
         for r in decode_reqs:
@@ -390,9 +430,17 @@ class Engine:
                     ps.ttl_misses += 1
                 if r.is_last_turn or r.tool is None:
                     ps.finish_time = end
+                    if self.obs is not None:
+                        self.obs.program_end(r.program_id, end)
+                        self.obs.programs_finished.inc(1.0, (self.engine_id,))
+                        self.obs.jct_seconds.observe(ps.jct,
+                                                     (self.engine_id,))
                 else:
                     ev.tool_started.append((r, r.tool))
                     ps.total_tool_time += r.tool_duration
+                    if self.obs is not None:
+                        self.obs.program_phase(r.program_id, "tool_pause",
+                                               end, args={"tool": r.tool})
         return self._finish_step(ev, now)
 
     def _finish_step(self, ev: StepEvents, now: float) -> StepEvents:
@@ -412,6 +460,9 @@ class Engine:
             ps = self.programs.get(r.program_id)
             if ps is not None:
                 ps.total_ttft += at - r.arrival_time
+            if self.obs is not None:
+                self.obs.ttft_seconds.observe(at - r.arrival_time,
+                                              (self.engine_id,))
 
     # ------------------------------------------------------- routing signals
     def prefix_match_tokens(self, req: Request) -> int:
@@ -453,3 +504,8 @@ class Engine:
         self.running.remove(r)
         self.scheduler.waiting.append(r)
         self.scheduler.stats.preemptions += 1
+        if self.obs is not None:
+            # back to the queue: its prefill/decode span ends here
+            self.obs.program_phase(r.program_id, "queued", now,
+                                   args={"turn": r.turn_idx,
+                                         "preempted": True})

@@ -158,6 +158,11 @@ class TieredKVStore:
         # the host copy they kept for the demotion; reload consumption
         # and same-program replacement do NOT fire it
         self.on_drop = None  # type: Optional[callable]
+        # telemetry: tier moves (put/demote/promote/drop) emit instants
+        # on the replica lane; obs_clock timestamps paths with no `now`
+        self.obs = None
+        self.obs_replica = ""
+        self.obs_clock = None  # type: Optional[callable]
 
     # -------------------------------------------------------------- sizing
     def _blocks_for(self, nbytes: float) -> int:
@@ -205,6 +210,9 @@ class TieredKVStore:
                 if from_hbm else ready_at
             self.entries[program_id] = entry
             self.stats.puts += 1
+            self._obs_tier("tier_put", program_id, now,
+                           {"tier": "dram", "blocks": blocks,
+                            "ready": round(entry.dram_ready, 9)})
             return entry
         if self.cfg.ssd_blocks and self.ssd_free_blocks() >= blocks:
             entry.ssd_blocks = blocks
@@ -215,10 +223,23 @@ class TieredKVStore:
                                                       earliest=staged).end
             self.entries[program_id] = entry
             self.stats.puts += 1
+            self._obs_tier("tier_put", program_id, now,
+                           {"tier": "ssd", "blocks": blocks,
+                            "ready": round(entry.ssd_ready, 9)})
             return entry
         self.stats.drops += 1
         self.stats.dropped_blocks += blocks
+        self._obs_tier("tier_full_drop", program_id, now,
+                       {"blocks": blocks})
         return None
+
+    def _obs_tier(self, name: str, program_id: str, now: Optional[float],
+                  args: dict) -> None:
+        if self.obs is not None:
+            if now is None:
+                now = self.obs_clock() if self.obs_clock is not None else 0.0
+            self.obs.tier_event(self.obs_replica, name, program_id, now,
+                                args)
 
     # ------------------------------------------------------------ demotion
     def _demote_lru(self, now: float = 0.0) -> bool:
@@ -273,6 +294,8 @@ class TieredKVStore:
         e.ssd_ready = max(e.ssd_ready, t.end)
         self.stats.demotions += 1
         self.stats.demoted_blocks += n
+        self._obs_tier("tier_demote", e.program_id, now,
+                       {"blocks": n, "from": "dram", "to": "ssd"})
 
     def demote(self, program_id: str, blocks: Optional[int] = None,
                now: float = 0.0) -> int:
@@ -306,6 +329,8 @@ class TieredKVStore:
         t = self.transfer.read_ssd(nbytes, now, earliest=e.ssd_ready)
         e.dram_ready = max(e.dram_ready, t.end)
         self.stats.promoted_blocks += n
+        self._obs_tier("tier_promote", program_id, now,
+                       {"blocks": n, "from": "ssd", "to": "dram"})
         return n
 
     # ------------------------------------------------------------- lookups
@@ -397,6 +422,8 @@ class TieredKVStore:
         if e is not None:
             self.stats.drops += 1
             self.stats.dropped_blocks += e.blocks
+            self._obs_tier("tier_drop", program_id, None,
+                           {"blocks": e.blocks})
             if self.on_drop is not None:
                 self.on_drop(program_id)
 

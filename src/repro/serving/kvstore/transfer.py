@@ -138,6 +138,10 @@ class Channel:
         self.busy_until = 0.0          # when the queue drains
         self.bytes_moved = 0.0
         self.n_transfers = 0
+        # telemetry: every committed transfer becomes a complete span on
+        # this channel's trace lane (obs_track, e.g. "r0/h2d")
+        self.obs = None
+        self.obs_track = ""
 
     def seconds(self, nbytes: float) -> float:
         """Occupancy of a single transfer (latency + size-dependent time);
@@ -161,6 +165,9 @@ class Channel:
         self.busy_until = end
         self.bytes_moved += max(nbytes, 0.0)
         self.n_transfers += 1
+        if self.obs is not None:
+            self.obs.channel_transfer(self.obs_track, self.name,
+                                      max(nbytes, 0.0), start, end)
         return Transfer(self.name, nbytes, start, end)
 
     def backlog_seconds(self, now: float) -> float:

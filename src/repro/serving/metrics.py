@@ -26,6 +26,11 @@ class Summary:
     avg_ttft: float = 0.0        # mean per-turn time-to-first-token
     prefill_tokens: float = 0.0  # tokens actually prefilled fleet-wide
     prefix_hit_tokens: float = 0.0  # prompt tokens served from shared-prefix KV
+    p50_queueing: float = 0.0    # per-program bubble-time percentiles
+    p99_queueing: float = 0.0
+    total_tool_pause_s: float = 0.0  # wall seconds programs spent in tools
+    reload_tokens: float = 0.0       # prompt tokens served by tier reloads
+    recompute_tokens: float = 0.0    # returning-turn tokens prefilled cold
 
     def row(self) -> dict:
         return dataclasses.asdict(self)
@@ -33,7 +38,9 @@ class Summary:
 
 def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0,
               prefill_tokens: float = 0.0,
-              prefix_hit_tokens: float = 0.0) -> Summary:
+              prefix_hit_tokens: float = 0.0,
+              reload_tokens: float = 0.0,
+              recompute_tokens: float = 0.0) -> Summary:
     done = [p for p in programs if p.finish_time >= 0]
     if not done:
         return Summary(0, *([0.0] * 9), 0.0)
@@ -59,4 +66,11 @@ def summarize(programs: Iterable[ProgramStats], total_tokens: int = 0,
         avg_ttft=float(sum(p.total_ttft for p in done) / max(turns, 1)),
         prefill_tokens=float(prefill_tokens),
         prefix_hit_tokens=float(prefix_hit_tokens),
+        p50_queueing=float(np.percentile(
+            [p.total_queueing for p in done], 50)),
+        p99_queueing=float(np.percentile(
+            [p.total_queueing for p in done], 99)),
+        total_tool_pause_s=float(sum(p.total_tool_time for p in done)),
+        reload_tokens=float(reload_tokens),
+        recompute_tokens=float(recompute_tokens),
     )

@@ -198,10 +198,52 @@ def step_gap(samples: list[StepSample], prof: ModelServingProfile,
         s.decode_avg_context)) for s in samples))
 
 
+def calibration_report(samples: list[StepSample],
+                       prof: ModelServingProfile,
+                       hw_in: HardwareProfile,
+                       hw_out: HardwareProfile) -> dict:
+    """JSON-able fit report: input vs fitted efficiencies, the total
+    measured-vs-analytic gap under each, and per-sample residuals under
+    the fitted profile (the telemetry plane's calibration artifact —
+    checked in under ``experiments/calibration/``)."""
+    cost = CostModel(prof, hw_out)
+    residuals = []
+    for s in samples:
+        analytic = cost.step_seconds(s.prefill_tokens, s.prefill_context,
+                                     s.decode_batch, s.decode_avg_context)
+        residuals.append({
+            "measured_s": round(s.measured_s, 9),
+            "analytic_s": round(analytic, 9),
+            "residual_s": round(s.measured_s - analytic, 9),
+            "prefill_tokens": s.prefill_tokens,
+            "prefill_context": s.prefill_context,
+            "decode_batch": s.decode_batch,
+            "decode_avg_context": s.decode_avg_context})
+    gap_in = step_gap(samples, prof, hw_in)
+    gap_out = step_gap(samples, prof, hw_out)
+    abs_res = sorted(abs(r["residual_s"]) for r in residuals)
+    return {
+        "hardware": hw_in.name,
+        "samples": len(samples),
+        "input": {"mfu": hw_in.mfu, "decode_eff": hw_in.decode_eff,
+                  "flops": hw_in.flops, "hbm_bw": hw_in.hbm_bw},
+        "fitted": {"mfu": round(hw_out.mfu, 9),
+                   "decode_eff": round(hw_out.decode_eff, 9)},
+        "gap_s": {"input": round(gap_in, 9),
+                  "fitted": round(gap_out, 9),
+                  "reduction": round(1.0 - gap_out / gap_in, 9)
+                  if gap_in > 0 else 0.0},
+        "abs_residual_s": {
+            "p50": round(abs_res[len(abs_res) // 2], 9) if abs_res else 0.0,
+            "max": round(abs_res[-1], 9) if abs_res else 0.0},
+        "residuals": residuals}
+
+
 def calibrate_hardware(samples: list[StepSample],
                        prof: ModelServingProfile, hw: HardwareProfile,
                        iters: int = 3,
-                       outlier_factor: float = 10.0) -> HardwareProfile:
+                       outlier_factor: float = 10.0,
+                       report_path: str | None = None) -> HardwareProfile:
     """Auto-calibrate ``mfu``/``decode_eff`` from measured step durations.
 
     The analytic model is linear in (1/mfu, 1/decode_eff) once each
@@ -221,7 +263,10 @@ def calibrate_hardware(samples: list[StepSample],
     every candidate is still scored on the full set. A calibrated
     efficiency above 1.0 is allowed: it means the profile's peak
     flops/bandwidth are mis-specified for this host, and wall-clock
-    accuracy (what the TTL model needs) beats physical plausibility."""
+    accuracy (what the TTL model needs) beats physical plausibility.
+
+    With ``report_path`` set, a :func:`calibration_report` (fitted
+    values + residuals) is written there as JSON."""
     if not samples:
         return hw
     meas = np.asarray([s.measured_s for s in samples])
@@ -266,7 +311,14 @@ def calibrate_hardware(samples: list[StepSample],
         cur = dataclasses.replace(hw, mfu=1.0 / inv[0],
                                   decode_eff=1.0 / inv[1])
         cands.append(cur)
-    return min(cands, key=lambda h: step_gap(samples, prof, h))
+    best = min(cands, key=lambda h: step_gap(samples, prof, h))
+    if report_path is not None:
+        import json
+        with open(report_path, "w") as f:
+            json.dump(calibration_report(samples, prof, hw, best), f,
+                      indent=2, sort_keys=True)
+            f.write("\n")
+    return best
 
 
 def make_prefill_reload_fn(cost: CostModel, coef: np.ndarray,

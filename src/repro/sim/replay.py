@@ -299,7 +299,8 @@ def _clone_programs(programs: list[Program]) -> list[Program]:
 
 
 def run_engine(programs: list[Program], rc: ReplayConfig,
-               physical: bool, on_step=None) -> tuple[list, Engine]:
+               physical: bool, on_step=None,
+               telemetry=None) -> tuple[list, Engine]:
     """One replay leg. Returns (decision log, engine); the log is a list
     of ``{"now": t, "events": [decision tuples]}`` records, one per
     engine step that made at least one decision."""
@@ -321,6 +322,8 @@ def run_engine(programs: list[Program], rc: ReplayConfig,
         backend = ShadowClockBackend(inner, cost)
     eng = Engine(cfg, rc.engine_config(block_bytes), hw,
                  backend=backend, cost=cost)
+    if telemetry is not None:
+        eng.attach_telemetry(telemetry)
     log: list = []
 
     def _capture(e, ev, now):
@@ -429,24 +432,28 @@ class ClusterReplayReport:
         return d
 
 
-def cluster_programs(seed: int, n: int = 10) -> list[Program]:
+def cluster_programs(seed: int, n: int = 10,
+                     rate_jps: float = 2.0) -> list[Program]:
     """Seeded skewed smoke workload for cluster replays: hot-tenant skew
     concentrates prefix affinity, tool storms synchronize returns, churn
     keeps re-homing live — all three migration triggers on a CPU-fast
     fleet."""
     from repro.sim.workload import generate_skewed_programs
     return generate_skewed_programs(
-        SMOKE_SPEC, n=n, rate_jps=2.0, seed=seed, tenants=3,
+        SMOKE_SPEC, n=n, rate_jps=rate_jps, seed=seed, tenants=3,
         tenant_skew=1.4, share_ratio=0.3, storm_frac=0.4,
         storm_gap_s=2.0, churn_frac=0.3, churn_scale=6.0)
 
 
 def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
                       replicas: int = 3,
-                      router: str = "kv_aware_migrate"
+                      router: str = "kv_aware_migrate",
+                      telemetry: bool = False
                       ) -> tuple[list[str], list[str], object]:
     """One cluster replay leg on the logical stack. Returns (trace lines,
-    conservation violations observed at step boundaries, cluster)."""
+    conservation violations observed at step boundaries, cluster). With
+    ``telemetry``, a shared :class:`~repro.obs.Telemetry` plane is
+    attached to every replica and left on ``cluster.obs``."""
     from repro.serving.cluster import Cluster, ClusterConfig
     cfg = get_config(rc.arch, smoke=True)
     prof = build_profile(cfg, 1)
@@ -460,6 +467,9 @@ def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
         peer_bw=2 * rc.h2d_bw_blocks * block_bytes,
         peer_latency_s=0.001)
     cluster = Cluster(engines, ccfg)
+    if telemetry:
+        from repro.obs import Telemetry
+        cluster.attach_telemetry(Telemetry())
     violations: list[str] = []
 
     def _capture(e, ev, now):
@@ -517,6 +527,78 @@ def run_cluster_replay(programs: list[Program],
                "engine0_pins": st.pins})
 
 
+# ------------------------------------------------------------- telemetry
+def write_telemetry_artifacts(tel, out_dir) -> dict:
+    """Export one run's full telemetry plane: Perfetto-loadable
+    ``trace.json``, the raw event stream ``trace.jsonl``, the Prometheus
+    text exposition ``metrics.prom``, its JSON mirror ``metrics.json``
+    and the TTL decision audit ``audit.json``. Returns
+    {artifact name -> path}."""
+    from repro.obs import export as obs_export
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    paths = {"trace": out / "trace.json",
+             "trace_raw": out / "trace.jsonl",
+             "metrics_prom": out / "metrics.prom",
+             "metrics_json": out / "metrics.json",
+             "audit": out / "audit.json"}
+    doc = obs_export.to_chrome(tel.trace)
+    paths["trace"].write_text(obs_export.dumps(doc))
+    tel.trace.save_jsonl(paths["trace_raw"])
+    paths["metrics_prom"].write_text(tel.metrics.exposition())
+    paths["metrics_json"].write_text(
+        json.dumps(tel.metrics.snapshot(), indent=2, sort_keys=True)
+        + "\n")
+    paths["audit"].write_text(
+        json.dumps(tel.audit.to_json(), indent=2, sort_keys=True) + "\n")
+    return {k: str(v) for k, v in paths.items()}
+
+
+def run_telemetry_demo(seed: int, out_dir,
+                       rc: ReplayConfig = ReplayConfig(),
+                       replicas: int = 3,
+                       router: str = "kv_aware_migrate") -> dict:
+    """The ISSUE's seeded observability scenario: a 3-replica cluster run
+    with the full telemetry plane on, exported to ``out_dir``. The same
+    seed is then run a second time and the Perfetto export must be
+    byte-identical; the exported trace must validate against the schema;
+    and the TTL audit must contain at least one complete
+    solve → pin → expiry/demotion chain. Returns a verdict dict."""
+    from repro.obs import export as obs_export
+    # denser than the conservation gate's workload: per-replica queueing
+    # must be positive so the TTL solver actually pins (the acceptance
+    # chain is solve -> pin -> expiry/demotion, not just demotes)
+    progs = cluster_programs(seed, n=16, rate_jps=3.0)
+    _, _, cluster = run_cluster_trace(progs, rc, replicas, router,
+                                      telemetry=True)
+    tel = cluster.obs
+    paths = write_telemetry_artifacts(tel, out_dir)
+    doc = obs_export.to_chrome(tel.trace)
+    schema_errors = obs_export.validate(doc)
+    _, _, cluster_b = run_cluster_trace(progs, rc, replicas, router,
+                                        telemetry=True)
+    bytes_a = obs_export.dumps(doc)
+    bytes_b = obs_export.dumps(obs_export.to_chrome(cluster_b.obs.trace))
+    complete = tel.audit.complete_programs()
+    verdict = {
+        "seed": seed, "replicas": replicas, "router": router,
+        "events": len(tel.trace.events),
+        "dropped_events": tel.trace.dropped,
+        "schema_errors": schema_errors,
+        "deterministic": bytes_a == bytes_b,
+        "ttl_solves": len(tel.audit.records),
+        "audit_links": len(tel.audit.links),
+        "complete_audit_chains": sorted(complete),
+        "migrations": cluster.stats.migrations,
+        "artifacts": paths,
+        "ok": (not schema_errors and bytes_a == bytes_b
+               and len(complete) >= 1),
+    }
+    (pathlib.Path(out_dir) / "verdict.json").write_text(
+        json.dumps(verdict, indent=2, sort_keys=True) + "\n")
+    return verdict
+
+
 # ----------------------------------------------------------------- CLI
 def main(argv=None) -> int:
     import argparse
@@ -530,11 +612,43 @@ def main(argv=None) -> int:
                          "conservation gate (logical stack)")
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--router", type=str, default="kv_aware_migrate")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="calibration mode: run one physical leg per "
+                         "seed and write the fitted mfu/decode_eff + "
+                         "residuals report (profiler.calibration_report)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="telemetry mode: seeded cluster run with the "
+                         "full observability plane; writes Perfetto "
+                         "trace + metrics + TTL audit and gates on "
+                         "schema validity, byte-identical same-seed "
+                         "export and a complete audit chain")
     args = ap.parse_args(argv)
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     failed = False
     for seed in args.seeds:
+        if args.telemetry:
+            verdict = run_telemetry_demo(
+                seed, out / f"seed{seed}", ReplayConfig(),
+                args.replicas, args.router)
+            print(f"telemetry seed {seed}: "
+                  f"{'OK' if verdict['ok'] else 'FAIL'} "
+                  f"(events={verdict['events']}, "
+                  f"solves={verdict['ttl_solves']}, "
+                  f"deterministic={verdict['deterministic']}, "
+                  f"complete_chains={len(verdict['complete_audit_chains'])})")
+            failed |= not verdict["ok"]
+            continue
+        if args.calibrate:
+            progs = seeded_programs(seed, n=args.programs)
+            _, eng = run_engine(progs, ReplayConfig(), physical=True)
+            path = out / f"calibration_seed{seed}.json"
+            cal = eng.backend.calibrate(report_path=str(path))
+            hw = eng.backend.cost.hw
+            print(f"calibrate seed {seed}: mfu {hw.mfu:.3f}->"
+                  f"{cal.mfu:.3f} decode_eff {hw.decode_eff:.3f}->"
+                  f"{cal.decode_eff:.3f} -> {path}")
+            continue
         if args.cluster:
             progs = cluster_programs(seed, n=max(args.programs, 10))
             first = run_cluster_trace(

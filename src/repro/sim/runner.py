@@ -112,14 +112,20 @@ class Simulator:
         total_tokens = 0
         prefill_tokens = 0
         prefix_hit_tokens = 0
+        reload_tokens = 0
+        recompute_tokens = 0
         for e in self.engines:
             programs.extend(e.programs.values())
             total_tokens += e.tokens_prefilled + e.tokens_decoded
             prefill_tokens += e.tokens_prefilled
             prefix_hit_tokens += e.scheduler.stats.prefix_hit_tokens
+            reload_tokens += e.scheduler.stats.reload_tokens
+            recompute_tokens += e.scheduler.stats.recompute_tokens
         return summarize(programs, total_tokens,
                          prefill_tokens=prefill_tokens,
-                         prefix_hit_tokens=prefix_hit_tokens)
+                         prefix_hit_tokens=prefix_hit_tokens,
+                         reload_tokens=reload_tokens,
+                         recompute_tokens=recompute_tokens)
 
 
 def run_workload(programs: list[Program], engines: list[Engine],

@@ -1,0 +1,268 @@
+"""Unified telemetry plane (trace spine + metrics registry + TTL audit).
+
+The load-bearing test is the decision-parity fuzz: on a seeded run,
+every scheduler/runtime mutation must emit exactly one trace event and
+one audit link, cross-checked against the StepEvents.decisions stream
+the differential harness already trusts. Plus: deterministic export
+(same seed -> byte-identical Perfetto JSON), schema validation, and a
+cluster smoke with per-replica / per-channel / per-program tracks and
+at least one complete TTL audit chain.
+"""
+import json
+import pathlib
+from collections import Counter as TallyCounter
+
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.audit import TTLAudit
+from repro.obs.export import dumps, to_chrome, validate
+from repro.obs.registry import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import TraceRecorder
+from repro.sim.replay import (ReplayConfig, cluster_programs, run_engine,
+                              run_cluster_trace, run_telemetry_demo,
+                              seeded_programs)
+
+
+class TestRegistry:
+    def test_counter_exposition_deterministic(self):
+        reg = MetricsRegistry()
+        c = reg.counter("x_total", "help text", ("a", "b"))
+        c.inc(2.0, ("v2", "w"))
+        c.inc(1.0, ("v1", "w"))
+        c.inc(0.5, ("v1", "w"))
+        text = reg.exposition()
+        assert text == ("# HELP x_total help text\n"
+                        "# TYPE x_total counter\n"
+                        'x_total{a="v1",b="w"} 1.5\n'
+                        'x_total{a="v2",b="w"} 2\n')
+        assert reg.exposition() == text            # stable across calls
+
+    def test_label_escaping(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("g", "h", ("l",))
+        g.set(1, ('has"quote\nand\\slash',))
+        line = reg.exposition().splitlines()[-1]
+        assert line == 'g{l="has\\"quote\\nand\\\\slash"} 1'
+
+    def test_histogram_buckets_cumulative(self):
+        h = Histogram("h_seconds", "h", (), buckets=(0.1, 1.0))
+        for v in (0.05, 0.5, 0.5, 5.0):
+            h.observe(v)
+        lines = h.expose()
+        assert 'h_seconds_bucket{le="0.1"} 1' in lines
+        assert 'h_seconds_bucket{le="1"} 3' in lines
+        assert 'h_seconds_bucket{le="+Inf"} 4' in lines
+        assert 'h_seconds_count 4' in lines
+        snap = h.snap()[0]
+        assert snap["count"] == 4 and snap["sum"] == pytest.approx(6.05)
+
+    def test_collect_callbacks_lazy(self):
+        reg = MetricsRegistry()
+        g = reg.gauge("occ", "h")
+        calls = []
+        reg.on_collect(lambda: (calls.append(1), g.set(42.0, ())))
+        assert not calls                           # nothing until exposition
+        snap = reg.snapshot()
+        assert calls == [1]
+        assert snap["occ"]["values"][0]["value"] == 42.0
+
+    def test_type_collision_asserts(self):
+        reg = MetricsRegistry()
+        reg.counter("m", "h")
+        with pytest.raises(AssertionError):
+            reg.gauge("m", "h")
+
+
+class TestTrace:
+    def test_ring_capacity_and_dropped(self):
+        tr = TraceRecorder(capacity=3)
+        for i in range(5):
+            tr.instant("lane", f"e{i}", float(i))
+        assert len(tr.events) == 3 and tr.dropped == 2
+        assert [e[3] for e in tr.events] == ["e2", "e3", "e4"]
+
+    def test_jsonl_roundtrip(self, tmp_path):
+        tr = TraceRecorder()
+        tr.instant("r0", "x", 1.5, cat="tier", args={"k": 1})
+        tr.complete("r0/h2d", "xfer", 1.0, 0.5, cat="transfer")
+        tr.async_begin("p0", "prefill", 0.25)
+        tr.async_end("p0", "prefill", 0.75)
+        path = tmp_path / "t.jsonl"
+        tr.save_jsonl(path)
+        loaded = TraceRecorder.load_jsonl(path)
+        assert [tuple(e[:2]) for e in loaded] == \
+            [tuple(e[:2]) for e in tr.events]
+        assert dumps(to_chrome(loaded)) == dumps(to_chrome(tr))
+
+
+class TestExport:
+    def _demo_recorder(self):
+        tr = TraceRecorder()
+        tr.instant("r0", "tick", 0.0)
+        tr.decision("r0", "admit", 1.0, "p0", ("none", 0))
+        tr.complete("r0/h2d", "xfer", 0.5, 0.25, cat="transfer")
+        tr.async_begin("p0", "decode", 1.0)
+        tr.async_end("p0", "decode", 2.0)
+        return tr
+
+    def test_tracks_and_schema(self):
+        doc = to_chrome(self._demo_recorder())
+        assert validate(doc) == []
+        procs = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e.get("name") == "process_name"}
+        threads = {e["args"]["name"] for e in doc["traceEvents"]
+                   if e.get("name") == "thread_name"}
+        assert procs == {"r0", "programs"}
+        assert threads == {"sched", "h2d"}
+        # the packed decision unpacks to a cat=decision instant
+        dec = [e for e in doc["traceEvents"] if e.get("cat") == "decision"]
+        assert len(dec) == 1 and dec[0]["ph"] == "i"
+        assert dec[0]["args"] == {"program": "p0", "info": ["none", 0]}
+
+    def test_validate_flags_unbalanced_async(self):
+        tr = TraceRecorder()
+        tr.async_end("p0", "decode", 1.0)          # end without begin
+        errs = validate(to_chrome(tr))
+        assert any("async end without begin" in e for e in errs)
+
+    def test_validate_flags_schema_violation(self):
+        doc = to_chrome(self._demo_recorder())
+        doc["traceEvents"][0] = {"ph": "i"}        # missing required keys
+        assert validate(doc)
+
+    def test_us_scaling(self):
+        tr = TraceRecorder()
+        tr.instant("r0", "x", 1.25)
+        ev = to_chrome(tr)["traceEvents"][-1]
+        assert ev["ts"] == 1_250_000.0
+
+
+class TestAudit:
+    def _solved(self):
+        from repro.core.ttl import TTLDecision
+        au = TTLAudit()
+        au.begin_solve("p0", "ls", 2, 5.0, replica="r0")
+        au.record_solve("ls", prefill_reload=1.25, queue_eta=0.5,
+                        decision=TTLDecision(ttl=3.0, gain=0.8,
+                                             source="per_tool",
+                                             prefill_reload=1.25,
+                                             eta=0.4, t_bar=1.0),
+                        n_tool=4, n_global=9)
+        return au
+
+    def test_record_consumes_staged_context(self):
+        au = self._solved()
+        rec = au.records[0]
+        assert rec.program_id == "p0" and rec.replica == "r0"
+        assert rec.turn_idx == 2 and rec.ts == 5.0
+        assert rec.inputs["prefill_reload"] == 1.25
+        assert rec.inputs["queue_eta"] == 0.5
+        assert rec.ttl == 3.0 and rec.source == "per_tool"
+        assert au._pending is None                 # context is one-shot
+
+    def test_links_and_lazy_actions(self):
+        au = self._solved()
+        au.link("p0", "pin", 5.0, (2, 3.0))
+        au.link("p1", "admit", 5.5, (0, "none"))   # no solve -> rid None
+        au.link("p0", "demote", 9.0, ("ttl_expired",))
+        assert au.records[0].actions == []         # not materialized yet
+        chain = au.chain("p0")
+        acts = [a[0] for a in chain["records"][0]["actions"]]
+        assert acts == ["pin", "demote"]
+        assert [l[2] for l in chain["links"]] == ["pin", "demote"]
+        assert au.links[1][0] is None              # unjustified decision
+        assert au.complete_programs() == ["p0"]
+        # incremental materialization keeps counting after a query
+        au.link("p0", "reload", 11.0, (0.5,))
+        assert [a[0] for a in au.chain("p0")["records"][0]["actions"]] == \
+            ["pin", "demote", "reload"]
+
+    def test_to_json_roundtrips(self):
+        au = self._solved()
+        au.link("p0", "pin", 5.0, (2, 3.0))
+        doc = json.loads(json.dumps(au.to_json()))
+        assert doc["records"][0]["ttl"] == 3.0
+        assert doc["dropped"] == 0
+
+
+class TestDecisionParityFuzz:
+    """Every mutation -> exactly one trace event + one audit link, in
+    StepEvents.decisions order (the ISSUE's completeness fuzz)."""
+
+    @pytest.mark.parametrize("seed", [0, 3])
+    def test_one_event_one_link_per_decision(self, seed):
+        decisions = []
+        tel = Telemetry()
+        run_engine(seeded_programs(seed, n=4, twins=False), ReplayConfig(),
+                   physical=False, telemetry=tel,
+                   on_step=lambda e, ev, now: decisions.extend(
+                       tuple(d) for d in ev.decisions))
+        assert decisions                           # the run did something
+        d_events = [e for e in tel.trace.events if e[0] == "d"]
+        assert tel.trace.dropped == 0
+        assert len(d_events) == len(decisions) == len(tel.audit.links)
+        for dec, dev, link in zip(decisions, d_events, tel.audit.links):
+            kind, pid, info = dec[0], dec[1], tuple(dec[2:])
+            assert (dev[3], dev[4], dev[5]) == (kind, pid, info)
+            assert (link[2], link[1], link[4]) == (kind, pid, info)
+        # the metrics funnel agrees with the event funnel, per kind
+        per_kind = TallyCounter(d[0] for d in decisions)
+        counted = TallyCounter()
+        for (_replica, kind), v in tel.decisions.values.items():
+            counted[kind] += int(v)
+        assert counted == per_kind
+
+    def test_same_seed_byte_identical_export(self):
+        blobs = []
+        for _ in range(2):
+            tel = Telemetry()
+            run_engine(seeded_programs(1, n=3, twins=False),
+                       ReplayConfig(), physical=False, telemetry=tel)
+            blobs.append(dumps(to_chrome(tel.trace)))
+            assert validate(json.loads(blobs[-1])) == []
+        assert blobs[0] == blobs[1]
+
+    def test_disabled_plane_emits_nothing(self):
+        log_off, eng = run_engine(seeded_programs(0, n=3, twins=False),
+                                  ReplayConfig(), physical=False)
+        assert eng.obs is None and eng.scheduler.obs is None
+        tel = Telemetry()
+        log_on, _ = run_engine(seeded_programs(0, n=3, twins=False),
+                               ReplayConfig(), physical=False,
+                               telemetry=tel)
+        assert log_on == log_off                   # observation != behavior
+
+
+class TestClusterTelemetry:
+    def test_cluster_tracks_and_audit(self):
+        progs = cluster_programs(0, n=12, rate_jps=3.0)
+        _, violations, cluster = run_cluster_trace(
+            progs, ReplayConfig(), replicas=2, telemetry=True)
+        assert violations == []
+        tel = cluster.obs
+        doc = json.loads(dumps(to_chrome(tel.trace)))
+        assert validate(doc) == []
+        procs = {e["args"]["name"] for e in doc["traceEvents"]
+                 if e.get("name") == "process_name"}
+        assert {"r0", "r1", "programs"} <= procs
+        threads = {e["args"]["name"] for e in doc["traceEvents"]
+                   if e.get("name") == "thread_name"}
+        assert {"h2d", "d2h"} <= threads           # per-channel tracks
+        spans = {e["name"] for e in doc["traceEvents"]
+                 if e.get("ph") in ("b", "e", "n")}
+        assert {"queued", "prefill", "decode", "finished"} <= spans
+        assert tel.audit.records                   # solves were recorded
+        text = tel.metrics.exposition()
+        assert "continuum_sched_decisions_total" in text
+        assert "continuum_jct_seconds_count" in text
+
+    def test_telemetry_demo_verdict(self, tmp_path):
+        verdict = run_telemetry_demo(0, tmp_path / "demo", replicas=2)
+        assert verdict["schema_errors"] == []
+        assert verdict["deterministic"] is True
+        assert verdict["ttl_solves"] > 0
+        assert verdict["complete_audit_chains"]
+        assert verdict["ok"] is True
+        for path in verdict["artifacts"].values():
+            assert pathlib.Path(path).exists()
