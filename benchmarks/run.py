@@ -9,7 +9,7 @@ import time
 
 def main() -> None:
     quick = "--full" not in sys.argv
-    from benchmarks import (bench_ablation, bench_cluster,
+    from benchmarks import (bench_ablation, bench_cluster, bench_decode,
                             bench_distributed, bench_e2e, bench_kvstore,
                             bench_memoryfulness, bench_offload,
                             bench_overhead, bench_prefix_sharing,
@@ -17,6 +17,7 @@ def main() -> None:
                             bench_sensitivity, bench_tail, bench_turns)
     benches = [
         ("fig8_e2e", bench_e2e.run),
+        ("decode", bench_decode.run),
         ("prefix_sharing", bench_prefix_sharing.run),
         ("fig10_offload", bench_offload.run),
         ("kvstore", bench_kvstore.run),

@@ -1,3 +1,29 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+"""Shared kernel-package plumbing.
+
+Every Pallas kernel in this tree takes an ``interpret`` flag. Its
+*default* is derived here, in one place, from the runtime platform:
+interpret mode (kernel body executed by the Pallas interpreter — correct
+everywhere, fast nowhere) on CPU hosts, the compiled Mosaic path on
+accelerators. Callers that need to force a mode (tests pinning interpret
+semantics, TPU debugging) still pass an explicit bool; passing ``None``
+(the default everywhere) means "whatever this platform wants".
+"""
+from __future__ import annotations
+
+
+def default_interpret() -> bool:
+    """True iff Pallas kernels should run in interpret mode here: CPU
+    hosts interpret; TPU/GPU run the compiled kernel path."""
+    import jax
+    return jax.default_backend() not in ("tpu", "gpu")
+
+
+def resolve_interpret(interpret) -> bool:
+    """``None`` -> the platform default; explicit bools pass through."""
+    return default_interpret() if interpret is None else bool(interpret)
+
+
+__all__ = ["default_interpret", "resolve_interpret"]

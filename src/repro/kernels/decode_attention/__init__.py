@@ -1,4 +1,6 @@
+from repro.kernels.decode_attention.kernel import sanitize_block_tables
 from repro.kernels.decode_attention.ops import paged_decode_attention
 from repro.kernels.decode_attention.ref import paged_decode_attention_ref
 
-__all__ = ["paged_decode_attention", "paged_decode_attention_ref"]
+__all__ = ["paged_decode_attention", "paged_decode_attention_ref",
+           "sanitize_block_tables"]

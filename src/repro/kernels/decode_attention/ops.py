@@ -1,4 +1,9 @@
-"""Jitted wrapper for the paged decode attention Pallas kernel."""
+"""Jitted wrapper for the paged decode attention Pallas kernel.
+
+``interpret=None`` (the default) resolves per-platform through
+:func:`repro.kernels.resolve_interpret`: interpret mode on CPU hosts, the
+compiled Mosaic path on accelerators.
+"""
 from __future__ import annotations
 
 import functools
@@ -8,9 +13,12 @@ import jax
 from repro.kernels.decode_attention.kernel import paged_decode_attention_kernel
 
 
-@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+@functools.partial(jax.jit, static_argnames=("scale", "interpret",
+                                             "return_residuals"))
 def paged_decode_attention(q, k_pages, v_pages, block_tables, seq_lens, *,
-                           scale=None, interpret=True):
+                           layer=None, scale=None, interpret=None,
+                           return_residuals=False):
     return paged_decode_attention_kernel(q, k_pages, v_pages, block_tables,
-                                         seq_lens, scale=scale,
-                                         interpret=interpret)
+                                         seq_lens, layer=layer, scale=scale,
+                                         interpret=interpret,
+                                         return_residuals=return_residuals)

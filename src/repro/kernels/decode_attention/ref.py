@@ -6,15 +6,31 @@ import jax.numpy as jnp
 
 
 def paged_decode_attention_ref(q, k_pages, v_pages, block_tables, seq_lens,
-                               *, scale: float | None = None) -> jnp.ndarray:
-    """q (B, H, D); k/v_pages (P, page, KV, D); block_tables (B, max_pages)
-    int32 (physical page per logical block); seq_lens (B,) -> out (B, H, D).
+                               *, layer=None,
+                               scale: float | None = None) -> jnp.ndarray:
+    """q (B, H, D); k/v_pages (P, page, KV, D) or layer-stacked
+    (L, P, page, KV, D) with ``layer`` selecting the layer; block_tables
+    (B, max_pages) int32 (physical page per logical block); seq_lens (B,)
+    -> out (B, H, D).
+
+    Same ragged-table contract as the kernel: dead slots (beyond
+    ``seq_lens``) are sanitized to page 0 before the gather, so garbage
+    padding is harmless here too.
     """
+    if k_pages.ndim == 5:
+        li = 0 if layer is None else layer
+        k_pages = k_pages[li]
+        v_pages = v_pages[li]
     B, H, D = q.shape
     P, page, KV, _ = k_pages.shape
     max_pages = block_tables.shape[1]
     G = H // KV
     scale = scale if scale is not None else 1.0 / (D ** 0.5)
+
+    seq_lens = jnp.asarray(seq_lens, jnp.int32)
+    ip = jnp.arange(max_pages, dtype=jnp.int32)
+    live = ip[None, :] * page < seq_lens[:, None]
+    block_tables = jnp.where(live, block_tables, 0).astype(jnp.int32)
 
     # gather each sequence's logical KV (B, max_pages*page, KV, D)
     kg = k_pages[block_tables].reshape(B, max_pages * page, KV, D)

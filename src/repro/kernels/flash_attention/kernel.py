@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 NEG_INF = -2.0e38
 
 
@@ -83,8 +85,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 def flash_attention_kernel(q, k, v, *, scale: float | None = None,
                            causal: bool = True, window: int = 0,
                            softcap: float = 0.0, block_q: int = 512,
-                           block_k: int = 512, interpret: bool = True):
+                           block_k: int = 512,
+                           interpret: bool | None = None):
     """q (B, H, S, D); k/v (B, KV, S, D) -> (B, H, S, D)."""
+    interpret = resolve_interpret(interpret)
     B, H, S, D = q.shape
     KV = k.shape[1]
     G = H // KV

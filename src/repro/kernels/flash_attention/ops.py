@@ -1,8 +1,8 @@
 """Jitted wrapper for the flash-attention Pallas kernel.
 
-``interpret=True`` on CPU (this container) — the kernel body executes in
-Python for correctness validation; on TPU pass ``interpret=False`` for the
-compiled Mosaic path.
+``interpret=None`` (the default) resolves per-platform through
+:func:`repro.kernels.resolve_interpret`: interpret mode on CPU hosts, the
+compiled Mosaic path on accelerators.
 """
 from __future__ import annotations
 
@@ -17,7 +17,7 @@ from repro.kernels.flash_attention.kernel import flash_attention_kernel
                                              "softcap", "block_q", "block_k",
                                              "interpret"))
 def flash_attention(q, k, v, *, scale=None, causal=True, window=0,
-                    softcap=0.0, block_q=512, block_k=512, interpret=True):
+                    softcap=0.0, block_q=512, block_k=512, interpret=None):
     return flash_attention_kernel(q, k, v, scale=scale, causal=causal,
                                   window=window, softcap=softcap,
                                   block_q=block_q, block_k=block_k,

@@ -1,7 +1,8 @@
-from repro.kernels.page_copy.ops import (copy_pages, gather_pages,
-                                         scatter_pages)
-from repro.kernels.page_copy.ref import (copy_pages_ref, page_gather_ref,
-                                         page_scatter_ref)
+from repro.kernels.page_copy.ops import (append_tokens, copy_pages,
+                                         gather_pages, scatter_pages)
+from repro.kernels.page_copy.ref import (append_tokens_ref, copy_pages_ref,
+                                         page_gather_ref, page_scatter_ref)
 
-__all__ = ["copy_pages", "gather_pages", "scatter_pages",
-           "copy_pages_ref", "page_gather_ref", "page_scatter_ref"]
+__all__ = ["append_tokens", "copy_pages", "gather_pages", "scatter_pages",
+           "append_tokens_ref", "copy_pages_ref", "page_gather_ref",
+           "page_scatter_ref"]

@@ -16,6 +16,10 @@ compute path (same scalar-prefetch design as the paged decode kernel).
   in-place (``input_output_aliases``), so untouched pages keep their
   contents — which is also what makes this the copy-on-write split
   primitive: gather the shared page, scatter into the fresh one.
+- ``token_append_kernel``: the batched-decode append unit — one new
+  token's K/V per sequence, all B sequences and all L layers, scattered
+  into each sequence's (exclusive) append page in ONE aliased call,
+  instead of B x L whole-pool ``.at[].set`` copies.
 
 Layout is the pools' native (L, P, page, KV, Dh); grid (n, L) with one
 (page, KV, Dh) block per step.
@@ -27,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 
 def _copy_kernel(tab_ref, src_ref, dst_ref):
     dst_ref[...] = src_ref[...]
@@ -36,9 +42,11 @@ def _scatter_kernel(tab_ref, staging_ref, pool_ref, out_ref):
     out_ref[...] = staging_ref[...]
 
 
-def page_gather_kernel(pages, page_ids, *, interpret: bool = True):
+def page_gather_kernel(pages, page_ids, *,
+                       interpret: bool | None = None):
     """pages (L, P, page, KV, Dh); page_ids (n,) int32 →
     staging (L, n, page, KV, Dh): staging[:, i] = pages[:, page_ids[i]]."""
+    interpret = resolve_interpret(interpret)
     L, P, page, KV, Dh = pages.shape
     n = page_ids.shape[0]
     grid_spec = pltpu.PrefetchScalarGridSpec(
@@ -59,10 +67,12 @@ def page_gather_kernel(pages, page_ids, *, interpret: bool = True):
     )(page_ids.astype(jnp.int32), pages)
 
 
-def page_scatter_kernel(pages, staging, page_ids, *, interpret: bool = True):
+def page_scatter_kernel(pages, staging, page_ids, *,
+                        interpret: bool | None = None):
     """pages (L, P, page, KV, Dh); staging (L, n, page, KV, Dh);
     page_ids (n,) int32 → pages with pages[:, page_ids[i]] = staging[:, i]
     (pool aliased in place; other pages untouched)."""
+    interpret = resolve_interpret(interpret)
     L, P, page, KV, Dh = pages.shape
     n = page_ids.shape[0]
     assert staging.shape == (L, n, page, KV, Dh), (staging.shape, pages.shape)
@@ -88,3 +98,62 @@ def page_scatter_kernel(pages, staging, page_ids, *, interpret: bool = True):
         input_output_aliases={2: 0},
         interpret=interpret,
     )(page_ids.astype(jnp.int32), staging, pages)
+
+
+def _append_kernel(tab_ref, off_ref, ktok_ref, vtok_ref, kin_ref, vin_ref,
+                   kout_ref, vout_ref):
+    b = pl.program_id(0)
+    off = off_ref[b]
+    # write the token row into slot `off` of the page, pass the rest through
+    row = jax.lax.broadcasted_iota(jnp.int32, kin_ref.shape, 2)
+    sel = row == off
+    kout_ref[...] = jnp.where(sel, ktok_ref[...][:, :, None], kin_ref[...])
+    vout_ref[...] = jnp.where(sel, vtok_ref[...][:, :, None], vin_ref[...])
+
+
+def token_append_kernel(k_pages, v_pages, k_tok, v_tok, page_ids, offsets, *,
+                        interpret: bool | None = None):
+    """Batched-decode append: k/v_pages (L, P, page, KV, Dh);
+    k/v_tok (L, B, KV, Dh) — the B new tokens' K/V for every layer;
+    page_ids (B,) the page each sequence appends into; offsets (B,) the
+    in-page slot. One grid step per (sequence, layer) writes one token row
+    into the aliased pools.
+
+    Caller contract: ``page_ids`` are pairwise distinct and exclusively
+    owned (COW splits resolved before the call) — the aliased blocks would
+    otherwise race."""
+    interpret = resolve_interpret(interpret)
+    L, P, page, KV, Dh = k_pages.shape
+    B = page_ids.shape[0]
+    assert k_tok.shape == (L, B, KV, Dh), (k_tok.shape, k_pages.shape)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                    # page-id table, offsets
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, 1, KV, Dh),
+                         lambda b, l, tab, off: (l, b, 0, 0)),
+            pl.BlockSpec((1, 1, KV, Dh),
+                         lambda b, l, tab, off: (l, b, 0, 0)),
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda b, l, tab, off: (l, tab[b], 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda b, l, tab, off: (l, tab[b], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda b, l, tab, off: (l, tab[b], 0, 0, 0)),
+            pl.BlockSpec((1, 1, page, KV, Dh),
+                         lambda b, l, tab, off: (l, tab[b], 0, 0, 0)),
+        ],
+    )
+    return pl.pallas_call(
+        _append_kernel, grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct(k_pages.shape, k_pages.dtype),
+                   jax.ShapeDtypeStruct(v_pages.shape, v_pages.dtype)],
+        # operands 4/5 (after the two scalar tables and the token rows)
+        # are the pools; alias them so unvisited pages keep their contents
+        input_output_aliases={4: 0, 5: 1},
+        interpret=interpret,
+    )(page_ids.astype(jnp.int32), offsets.astype(jnp.int32),
+      k_tok.astype(k_pages.dtype), v_tok.astype(v_pages.dtype),
+      k_pages, v_pages)

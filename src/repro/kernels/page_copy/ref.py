@@ -18,3 +18,12 @@ def page_scatter_ref(pages, staging, page_ids) -> jnp.ndarray:
 def copy_pages_ref(pages, src_ids, dst_ids) -> jnp.ndarray:
     """pages[:, dst_ids[i]] = pages[:, src_ids[i]] (COW split oracle)."""
     return pages.at[:, dst_ids].set(pages[:, src_ids])
+
+
+def append_tokens_ref(k_pages, v_pages, k_tok, v_tok, page_ids, offsets):
+    """k/v_pages (L, P, page, KV, Dh); k/v_tok (L, B, KV, Dh);
+    page_ids/offsets (B,) → pools with
+    pages[:, page_ids[b], offsets[b]] = tok[:, b]."""
+    k_pages = k_pages.at[:, page_ids, offsets].set(k_tok.astype(k_pages.dtype))
+    v_pages = v_pages.at[:, page_ids, offsets].set(v_tok.astype(v_pages.dtype))
+    return k_pages, v_pages

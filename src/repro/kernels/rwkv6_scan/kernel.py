@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import resolve_interpret
+
 CLIP = 38.0
 
 
@@ -71,9 +73,10 @@ def _rwkv_kernel(r_ref, k_ref, v_ref, lw_ref, u_ref, s0_ref, o_ref, sout_ref,
 
 
 def rwkv6_scan_kernel(r, k, v, w, u, init_state=None, *, chunk: int = 64,
-                      interpret: bool = True):
+                      interpret: bool | None = None):
     """r/k/v/w (B, T, H, K); u (H, K); init_state (B, H, K, K) or None.
     Returns (o (B, T, H, K), final_state (B, H, K, K))."""
+    interpret = resolve_interpret(interpret)
     B, T, H, K = r.shape
     L = min(chunk, T)
     assert T % L == 0, (T, L)

@@ -1,4 +1,8 @@
-"""Jitted wrapper for the RWKV6 WKV Pallas kernel."""
+"""Jitted wrapper for the RWKV6 WKV Pallas kernel.
+
+``interpret=None`` (the default) resolves per-platform through
+:func:`repro.kernels.resolve_interpret`.
+"""
 from __future__ import annotations
 
 import functools
@@ -9,6 +13,6 @@ from repro.kernels.rwkv6_scan.kernel import rwkv6_scan_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
-def rwkv6_scan(r, k, v, w, u, init_state=None, *, chunk=64, interpret=True):
+def rwkv6_scan(r, k, v, w, u, init_state=None, *, chunk=64, interpret=None):
     return rwkv6_scan_kernel(r, k, v, w, u, init_state, chunk=chunk,
                              interpret=interpret)

@@ -52,7 +52,7 @@ class JaxModelBackend:
     def __init__(self, cfg: ModelConfig, params=None, rng=None,
                  max_len: int = 4096, runtime: PagedKVRuntime | None = None,
                  n_pages: Optional[int] = None, page_size: int = 16,
-                 interpret: bool = True):
+                 interpret: bool | None = None):
         if runtime is None:
             if cfg.family not in PAGED_FAMILIES or \
                     cfg.local_global_alternating:
@@ -275,6 +275,7 @@ class JaxModelBackend:
                 # prompt complete: publish / dedup into the shared index
                 rt.publish_prefix(self.prefix_index, pid,
                                   self._req_hashes(req), now=now)
+        decode_pids = []
         for req in decode:
             pid = req.program_id
             # pages must cover every position a decode step attends to:
@@ -282,6 +283,10 @@ class JaxModelBackend:
             # and at decode time the engine believes ALL of them exist
             target = req.prompt_len + max(req.generated - 1, 0)
             self._materialize(req, target, expected=target)
-            rt.decode(self.params, pid)
-            self.decode_tokens_computed += 1
+            decode_pids.append(pid)
+        if decode_pids:
+            # the whole decode batch through ONE fused step per layer
+            # (bit-identical to the per-program loop — see decode_batch)
+            rt.decode_batch(self.params, decode_pids)
+            self.decode_tokens_computed += len(decode_pids)
         return max(time.time() - t0, 1e-6)

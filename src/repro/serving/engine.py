@@ -200,7 +200,10 @@ class Engine:
                     f"backend page_size {runtime.page_size} != engine "
                     f"block_size {ecfg.block_size}: physical pages and "
                     f"accounting blocks must be the same granularity")
-            runtime.grow(self.blocks.total + 16)
+            # headroom beyond the accounting pool: a batched decode step
+            # may COW-split one shared append page per batch member
+            # before any accounting-side eviction can run
+            runtime.grow(self.blocks.total + max(16, ecfg.max_batch))
             if self.prefix_index is not None \
                     and hasattr(self.backend, "enable_prefix_sharing"):
                 self.backend.enable_prefix_sharing()

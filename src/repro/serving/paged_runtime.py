@@ -30,12 +30,15 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.kernels import resolve_interpret
 from repro.kernels.decode_attention import paged_decode_attention
-from repro.kernels.page_copy import copy_pages, gather_pages, scatter_pages
+from repro.kernels.page_copy import (append_tokens, copy_pages, gather_pages,
+                                     scatter_pages)
 from repro.models import attention as attn_mod
-from repro.models.common import cast_params, rms_norm, take_layer
+from repro.models.common import cast_params, rms_norm
 from repro.models.mlp import mlp_apply
 from repro.models.transformer import Model
 
@@ -54,14 +57,16 @@ class ProgramEntry:
 
 class PagedKVRuntime:
     def __init__(self, cfg: ModelConfig, n_pages: int = 64,
-                 page_size: int = 16, interpret: bool = True):
+                 page_size: int = 16, interpret: bool | None = None):
         assert cfg.family in PAGED_FAMILIES and \
             not cfg.local_global_alternating, "uniform-attention families"
         self.cfg = cfg
         self.model = Model(cfg)
         self.page_size = page_size
         self.n_pages = n_pages
-        self.interpret = interpret
+        self.interpret = resolve_interpret(interpret)
+        # one jitted batched decode step; jax.jit retraces per (B, n_tab)
+        self._decode_step = jax.jit(self._decode_step_impl)
         L, KV, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
         dt = jnp.dtype(cfg.kv_cache_dtype or cfg.compute_dtype)
         self.k_pages = jnp.zeros((L, n_pages, page_size, KV, Dh), dt)
@@ -369,45 +374,52 @@ class PagedKVRuntime:
         return cache
 
     # ------------------------------------------------------------ decode
-    def decode(self, params, program_id: str) -> jax.Array:
-        """One decode step for the program's last token, attention served by
-        the Pallas paged kernel against the (possibly pinned) pages."""
+    def _decode_step_impl(self, params, k_pages, v_pages, toks, tables,
+                          lens, app_pages, app_offs):
+        """One fused decode step for a whole batch: toks (B,) last tokens;
+        tables (B, n_tab) sentinel-0-padded ragged block tables; lens (B,)
+        CURRENT lengths (the kernel attends over the old pages; the new
+        token's own k/v is merged analytically); app_pages/app_offs (B,)
+        where each sequence's new k/v lands. One ``lax.scan`` over layers,
+        one ``paged_decode_attention`` per layer for ALL B programs, and
+        ONE ``append_tokens`` scatter for all B x L new k/v rows — the
+        pools are consumed in their native layout (no per-layer slice, no
+        transpose, no dtype-cast copy of the pool, ROADMAP 4(a))."""
         cfg = self.cfg
-        e = self.programs[program_id]
-        self._ensure_capacity(e, e.length + 1)
-        # the append page must be exclusive BEFORE the block table is
-        # built: a COW split mid-loop would leave the table pointing at
-        # the stale shared page
-        self._writable_page(e, e.length // self.page_size)
-        tables = jnp.asarray(e.pages, jnp.int32)[None]           # (1, n)
-        # last generated token id is tracked by the caller; here we take the
-        # model's own greedy continuation from the current state:
-        tok = self._last_token(params, program_id)
+        B = toks.shape[0]
+        KV, Dh, H = cfg.num_kv_heads, cfg.head_dim, cfg.num_heads
+        G = H // KV
+        scale = 1.0 / math.sqrt(Dh)
+        L = cfg.num_layers
         cparams = cast_params(params, self.model.specs(), cfg.compute_dtype)
-        x = cparams["embed"][tok.reshape(1, 1)].astype(cfg.compute_dtype)
+        x = cparams["embed"][toks][:, None].astype(cfg.compute_dtype)
         if cfg.scale_embeddings:
             x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
-        pos = jnp.asarray(e.length, jnp.int32)
-        scale = 1.0 / math.sqrt(cfg.head_dim)
-        L = cfg.num_layers
-        for layer in range(L):
-            p = take_layer(cparams["blocks"], layer)
+        positions = lens[:, None]          # (B, 1): new token at `length`
+
+        def body(x, inp):
+            li, p = inp
             h = rms_norm(x, p["ln1"], cfg.norm_eps)
-            q, k, v = attn_mod.qkv_project(p["attn"], h, cfg, pos[None])
-            # append this token's k/v into the page (made exclusive above)
-            pi = e.pages[e.length // self.page_size]
-            off = e.length % self.page_size
-            self.k_pages = self.k_pages.at[layer, pi, off].set(
-                k[0, 0].astype(self.k_pages.dtype))
-            self.v_pages = self.v_pages.at[layer, pi, off].set(
-                v[0, 0].astype(self.v_pages.dtype))
-            o = paged_decode_attention(
-                q[:, 0].astype(cfg.compute_dtype),
-                self.k_pages[layer].astype(cfg.compute_dtype),
-                self.v_pages[layer].astype(cfg.compute_dtype),
-                tables, jnp.asarray([e.length + 1], jnp.int32),
-                scale=scale, interpret=self.interpret)
-            a = attn_mod.out_project(p["attn"], o[:, None])
+            q, k, v = attn_mod.qkv_project(p["attn"], h, cfg, positions)
+            qd = q[:, 0]                               # (B, H, Dh)
+            k_new, v_new = k[:, 0], v[:, 0]            # (B, KV, Dh)
+            acc, m, l = paged_decode_attention(
+                qd, k_pages, v_pages, tables, lens, layer=li, scale=scale,
+                interpret=self.interpret, return_residuals=True)
+            # merge the new token's own (k, v) — not yet in any page —
+            # into the kernel's online-softmax state, exactly
+            qg = qd.reshape(B, KV, G, Dh).astype(jnp.float32)
+            kf = k_new.astype(jnp.float32)
+            vf = v_new.astype(jnp.float32)
+            s_self = jnp.einsum("bkgd,bkd->bkg", qg, kf) * scale
+            m2 = jnp.maximum(m, s_self)
+            alpha = jnp.exp(m - m2)
+            p_self = jnp.exp(s_self - m2)
+            acc2 = acc * alpha[..., None] \
+                + p_self[..., None] * vf[:, :, None, :]
+            l2 = l * alpha + p_self
+            o = (acc2 / jnp.maximum(l2, 1e-30)[..., None]).reshape(B, H, Dh)
+            a = attn_mod.out_project(p["attn"], o.astype(x.dtype)[:, None])
             x = x + a
             h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
             if "router" in p["mlp"]:
@@ -415,12 +427,75 @@ class PagedKVRuntime:
                 x = x + moe_apply(p["mlp"], h2, cfg)
             else:
                 x = x + mlp_apply(p["mlp"], h2, cfg.activation)
+            return x, (k_new, v_new)
+
+        x, (ks, vs) = jax.lax.scan(
+            body, x, (jnp.arange(L, dtype=jnp.int32), cparams["blocks"]))
+        # ks/vs (L, B, KV, Dh): every layer's new-token k/v, scattered
+        # into the (exclusive) append pages in ONE aliased pallas call
+        k_pages, v_pages = append_tokens(k_pages, v_pages, ks, vs,
+                                         app_pages, app_offs,
+                                         interpret=self.interpret)
         x = rms_norm(x, cparams["final_norm"], cfg.norm_eps)
         head = cparams["embed"].T if cfg.tie_embeddings else cparams["lm_head"]
-        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))
-        e.length += 1
-        self._last[program_id] = jnp.argmax(logits[0, -1]).astype(jnp.int32)
-        return logits[0, -1]
+        logits = jnp.einsum("bsd,dv->bsv", x, head.astype(x.dtype))[:, 0]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, nxt, k_pages, v_pages
+
+    def decode_batch(self, params, program_ids: list[str]) -> list[jax.Array]:
+        """One decode step for the WHOLE batch through one fused kernel
+        step per layer. Returns each program's next-token logits, in
+        ``program_ids`` order.
+
+        Per-row results are independent of batch composition and of the
+        table padding width (dead table slots never reach the compute or
+        the accumulators), so ``decode_batch(ids)`` is bit-identical to
+        ``[decode(pid) for pid in ids]`` in any order."""
+        if not program_ids:
+            return []
+        assert len(set(program_ids)) == len(program_ids), \
+            "duplicate program ids in one decode batch"
+        entries = [self.programs[pid] for pid in program_ids]
+        ps = self.page_size
+        for e in entries:
+            self._ensure_capacity(e, e.length + 1)
+            # every append page must be exclusive BEFORE the tables are
+            # built: a COW split mid-batch would leave some row's table
+            # pointing at the stale shared page
+            self._writable_page(e, e.length // ps)
+        B = len(entries)
+        # ragged tables, padded to a pow2 width with the valid sentinel
+        # page 0 (the kernel's DMA index map reads EVERY slot — see
+        # kernels/decode_attention: garbage padding is an OOB fetch on
+        # hardware); pow2 bucketing bounds XLA retraces to O(log pages)
+        max_pages = max(len(e.pages) for e in entries)
+        n_tab = 1 << max(0, max_pages - 1).bit_length()
+        tables = np.zeros((B, n_tab), np.int32)
+        for i, e in enumerate(entries):
+            tables[i, :len(e.pages)] = e.pages
+        lens = np.asarray([e.length for e in entries], np.int32)
+        app_pages = np.asarray([e.pages[e.length // ps] for e in entries],
+                               np.int32)
+        app_offs = np.asarray([e.length % ps for e in entries], np.int32)
+        assert len(set(app_pages.tolist())) == B, \
+            "append pages must be pairwise distinct (COW resolved above)"
+        toks = jnp.stack([self._last_token(params, pid)
+                          for pid in program_ids])
+        logits, nxt, self.k_pages, self.v_pages = self._decode_step(
+            params, self.k_pages, self.v_pages, toks,
+            jnp.asarray(tables), jnp.asarray(lens),
+            jnp.asarray(app_pages), jnp.asarray(app_offs))
+        for i, pid in enumerate(program_ids):
+            self.programs[pid].length += 1
+            self._last[pid] = nxt[i]
+        return [logits[i] for i in range(B)]
+
+    def decode(self, params, program_id: str) -> jax.Array:
+        """One decode step for the program's last token, attention served by
+        the Pallas paged kernel against the (possibly pinned) pages.
+        Delegates to :meth:`decode_batch` — sequential and batched decode
+        share one code path, so they are bit-identical by construction."""
+        return self.decode_batch(params, [program_id])[0]
 
     def seed_token(self, program_id: str, tok: int) -> None:
         self._last[program_id] = jnp.asarray(tok, jnp.int32)

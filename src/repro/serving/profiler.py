@@ -135,7 +135,13 @@ class CostModel:
         return total
 
     def decode_step_seconds(self, batch: int, avg_context: int) -> float:
-        """One decode iteration for `batch` sequences."""
+        """One decode iteration for `batch` sequences.
+
+        The model amortizes the parameter read over the WHOLE batch — the
+        shape the physical path now matches: ``PagedKVRuntime.decode_batch``
+        serves all ``batch`` sequences through one fused kernel step per
+        layer, so one parameter sweep feeds every sequence (a per-program
+        decode loop would pay ``param_read`` ``batch`` times)."""
         if batch <= 0:
             return 0.0
         p, hw = self.prof, self.hw
@@ -144,6 +150,14 @@ class CostModel:
             / (hw.hbm_bw * p.chips * hw.decode_eff)
         flops = batch * p.flops_per_token / (hw.flops * p.chips * hw.mfu)
         return max(param_read + kv_read, flops)
+
+    def decode_tokens_per_s(self, batch: int, avg_context: int) -> float:
+        """Analytic decode throughput (tokens/s) at a given batch shape —
+        the reference curve ``benchmarks/bench_decode.py`` plots the
+        measured per-program vs batched sweep against."""
+        if batch <= 0:
+            return 0.0
+        return batch / self.decode_step_seconds(batch, avg_context)
 
     def step_seconds(self, prefill_tokens: int, prefill_context: int,
                      decode_batch: int, decode_avg_context: int) -> float:

@@ -68,6 +68,24 @@ SMOKE_SPEC = WorkloadSpec(
     min_turn_tokens=48, min_output_tokens=3, min_new_tokens=24,
 )
 
+#: Decode-heavy variant: most of each turn's tokens are *generated*, so
+#: engine steps carry large decode batches and small prefill chunks —
+#: the trace that exercises the fused ``decode_batch`` path (ragged
+#: tables, COW splits mid-batch) through the differential gate.
+SMOKE_DECODE_SPEC = WorkloadSpec(
+    name="replay-decode-heavy",
+    mean_turns=2.0, std_turns=0.6,
+    tool_mean_s=0.6, tool_std_s=0.8,
+    tokens_mean=220, tokens_std=50,
+    output_frac=0.55, max_context=448,
+    tools=(("ls", 0.4, 0.15, 0.5), ("pytest", 0.3, 1.2, 0.8),
+           ("web", 0.3, 0.4, 1.0)),
+    min_turn_tokens=48, min_output_tokens=24, min_new_tokens=24,
+)
+
+#: CLI ``--workload`` registry for the differential gate.
+WORKLOAD_SPECS = {"smoke": SMOKE_SPEC, "decode-heavy": SMOKE_DECODE_SPEC}
+
 
 @dataclasses.dataclass
 class ReplayConfig:
@@ -607,6 +625,11 @@ def main(argv=None) -> int:
     ap.add_argument("--seeds", type=int, nargs="+", default=[0, 1, 2])
     ap.add_argument("--programs", type=int, default=6)
     ap.add_argument("--out", type=str, default="experiments/replay")
+    ap.add_argument("--workload", type=str, default="smoke",
+                    choices=sorted(WORKLOAD_SPECS),
+                    help="trace shape for the differential gate: 'smoke' "
+                         "(prefill-heavy) or 'decode-heavy' (most tokens "
+                         "generated -> large fused decode batches)")
     ap.add_argument("--cluster", action="store_true",
                     help="cluster mode: N-replica determinism + KV "
                          "conservation gate (logical stack)")
@@ -663,12 +686,15 @@ def main(argv=None) -> int:
             print(f"cluster seed {seed}: {report.describe()}")
             failed |= not report.ok
             continue
-        trace = out / f"trace_seed{seed}.jsonl"
-        record_trace(seeded_programs(seed, n=args.programs), trace)
+        spec = WORKLOAD_SPECS[args.workload]
+        tag = "" if args.workload == "smoke" else f"_{args.workload}"
+        trace = out / f"trace_seed{seed}{tag}.jsonl"
+        record_trace(seeded_programs(seed, n=args.programs, spec=spec),
+                     trace)
         report = run_differential(load_trace(trace))
-        (out / f"verdict_seed{seed}.json").write_text(
+        (out / f"verdict_seed{seed}{tag}.json").write_text(
             json.dumps(report.to_json(), indent=2, default=str))
-        print(f"seed {seed}: {report.describe()}")
+        print(f"seed {seed} [{args.workload}]: {report.describe()}")
         failed |= not report.ok
     return 1 if failed else 0
 

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.kernels.decode_attention import (paged_decode_attention,
-                                            paged_decode_attention_ref)
+                                            paged_decode_attention_ref,
+                                            sanitize_block_tables)
 from repro.kernels.flash_attention import flash_attention, flash_attention_ref
 from repro.kernels.page_copy import copy_pages, gather_pages, scatter_pages
 from repro.kernels.page_copy.ref import (copy_pages_ref, page_gather_ref,
@@ -95,6 +96,99 @@ class TestPagedDecode:
                                            lens)
         np.testing.assert_allclose(np.asarray(out_pinned),
                                    np.asarray(out_fresh), atol=1e-6)
+
+
+class TestRaggedBlockTables:
+    """The latent DMA hazard: Pallas evaluates BlockSpec index maps for
+    EVERY grid step, including dead pages the kernel body skips — so
+    garbage ids in a ragged batch's padding slots would be fetched from
+    HBM out-of-bounds on hardware. The contract (dead slots sanitized to
+    sentinel page 0) makes every DMA in-bounds by construction."""
+
+    def _inputs(self, B=3, H=4, KV=2, D=32, page=8, npages=4, P=12):
+        ks = jax.random.split(jax.random.fold_in(RNG, 42), 3)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        kp = jax.random.normal(ks[1], (P, page, KV, D), jnp.float32)
+        vp = jax.random.normal(ks[2], (P, page, KV, D), jnp.float32)
+        lens = jnp.asarray([5, 0, 25], jnp.int32)   # 1 / 0 / 4 live pages
+        clean = jnp.asarray([[1, 0, 0, 0],
+                             [0, 0, 0, 0],
+                             [2, 3, 4, 5]], jnp.int32)
+        return q, kp, vp, clean, lens, page, P
+
+    def test_sanitizer_rewrites_dead_slots_only(self):
+        _, _, _, clean, lens, page, _ = self._inputs()
+        garbage = clean.at[0, 1:].set(jnp.asarray([999, -7, 2**30]))
+        garbage = garbage.at[1, :].set(-1)
+        out = sanitize_block_tables(garbage, lens, page)
+        assert np.array_equal(np.asarray(out), np.asarray(clean))
+
+    def test_every_dma_index_in_bounds(self):
+        """The in-range guarantee the index map relies on: after
+        sanitization EVERY slot the DMA can read — live or dead — holds a
+        valid physical page id."""
+        _, _, _, clean, lens, page, P = self._inputs()
+        garbage = jax.random.randint(jax.random.fold_in(RNG, 17),
+                                     clean.shape, -2**31, 2**31 - 1,
+                                     jnp.int32)
+        ip = np.arange(clean.shape[1])
+        live = ip[None, :] * page < np.asarray(lens)[:, None]
+        merged = jnp.where(jnp.asarray(live), clean, garbage)
+        out = np.asarray(sanitize_block_tables(merged, lens, page))
+        assert ((out >= 0) & (out < P)).all()
+
+    def test_garbage_padding_is_harmless(self):
+        """Red/green regression for the ragged-table bug: a table whose
+        dead slots hold arbitrary garbage must produce bit-identical
+        output to the clean sentinel-padded table (the garbage never
+        reaches the DMA, the compute, or the accumulators)."""
+        q, kp, vp, clean, lens, page, P = self._inputs()
+        garbage = clean.at[0, 1:].set(jnp.asarray([P + 5, 2**28, -3]))
+        garbage = garbage.at[1, :].set(jnp.asarray([-1, P, P + 1, 2**30]))
+        out_clean = paged_decode_attention(q, kp, vp, clean, lens)
+        out_garbage = paged_decode_attention(q, kp, vp, garbage, lens)
+        assert np.array_equal(np.asarray(out_clean), np.asarray(out_garbage))
+
+    def test_padding_width_invariance(self):
+        """Widening the table with extra dead sentinel slots must not
+        change any row bitwise (per-row accumulators see only live
+        pages)."""
+        q, kp, vp, clean, lens, page, _ = self._inputs()
+        wide = jnp.concatenate(
+            [clean, jnp.zeros((clean.shape[0], 4), jnp.int32)], axis=1)
+        out_narrow = paged_decode_attention(q, kp, vp, clean, lens)
+        out_wide = paged_decode_attention(q, kp, vp, wide, lens)
+        assert np.array_equal(np.asarray(out_narrow), np.asarray(out_wide))
+
+    def test_residuals_merge_matches_ref(self):
+        """return_residuals exposes the unnormalized online-softmax state;
+        normalizing it must reproduce the dense oracle, and a zero-length
+        row must degenerate to (m=-inf, l=0) so a merged self-attention
+        term comes out as pure v_new."""
+        q, kp, vp, clean, lens, page, _ = self._inputs()
+        B, H, D = q.shape
+        KV = kp.shape[2]
+        acc, m, l = paged_decode_attention(q, kp, vp, clean, lens,
+                                           return_residuals=True)
+        acc, m, l = np.asarray(acc), np.asarray(m), np.asarray(l)
+        assert (m[1] < -1e37).all() and (l[1] == 0).all() \
+            and (acc[1] == 0).all()
+        o = (acc / np.maximum(l, 1e-30)[..., None]).reshape(B, H, D)
+        ref = np.asarray(paged_decode_attention_ref(q, kp, vp, clean, lens))
+        live = [0, 2]
+        np.testing.assert_allclose(o[live], ref[live], rtol=2e-5, atol=2e-5)
+
+    def test_layer_stacked_pool_matches_slice(self):
+        """The 5-D layer-stacked pool with a traced ``layer`` scalar must
+        match slicing the layer out by hand (the lax.scan decode path)."""
+        q, kp, vp, clean, lens, page, _ = self._inputs()
+        kp5 = jnp.stack([kp, kp * 0.5, kp + 1.0])
+        vp5 = jnp.stack([vp, vp * 0.5, vp + 1.0])
+        for li in range(3):
+            out5 = paged_decode_attention(q, kp5, vp5, clean, lens,
+                                          layer=jnp.asarray(li, jnp.int32))
+            out4 = paged_decode_attention(q, kp5[li], vp5[li], clean, lens)
+            assert np.array_equal(np.asarray(out5), np.asarray(out4))
 
 
 class TestRWKV6Scan:
