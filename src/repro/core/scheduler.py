@@ -122,6 +122,11 @@ class Scheduler:
         self.now = now
         req.state = RequestState.WAITING
         self.waiting.append(req)
+        if self.obs is not None:
+            # ground-truth return gap for the regret analyzer: the delta
+            # from the previous turn's solve (tool start) to this arrival
+            # is the tool duration the solver could only model
+            self.obs.audit.note_arrival(req.program_id, now)
         # seen program: close the tool-call interval (S[f] <- duration)
         self.handler.update_tool_call_time(req.program_id, now)
         self.program_turns[req.program_id] = req.turn_idx + 1

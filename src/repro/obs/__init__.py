@@ -40,13 +40,21 @@ _PROGRAM_MARKS = {"demote": "demoted", "evict": "evicted",
 
 class Telemetry:
     def __init__(self, trace_capacity: int = 200_000,
-                 audit_capacity: int = 100_000):
+                 audit_capacity: int = 100_000,
+                 audit_link_capacity: Optional[int] = None):
         self.trace = TraceRecorder(trace_capacity)
         self.metrics = MetricsRegistry()
-        self.audit = TTLAudit(audit_capacity)
+        self.audit = TTLAudit(audit_capacity,
+                              link_capacity=audit_link_capacity)
         self.audit.sink = self._on_solve
+        # live-program oracle: audit compaction keeps complete raw chains
+        # for programs that still have an open lifecycle span or pin
+        self.audit.live_fn = self.live_programs
         self._phase: dict[str, str] = {}     # program -> open lifecycle span
         self._pinned: set[str] = set()       # programs with an open pin span
+        self.replicas: list[str] = []        # engine ids wired into the plane
+        # per-tenant burn-rate monitor (enable_slo); None = SLO off
+        self.slo = None
         m = self.metrics
         self.decisions = m.counter(
             "continuum_sched_decisions_total",
@@ -118,6 +126,8 @@ class Telemetry:
         """Wire one replica into the shared plane (the engine calls this
         from :meth:`Engine.attach_telemetry`)."""
         r = engine.engine_id
+        if r not in self.replicas:
+            self.replicas.append(r)
         engine.obs = self
         sch = engine.scheduler
         sch.obs = self
@@ -187,6 +197,7 @@ class Telemetry:
         tr = self.trace
         if len(tr.events) == tr.capacity:
             tr.dropped += 1
+        tr.seq += 1
         tr.events.append(("d", now, replica, kind, program_id, info))
         key = (replica, kind)
         dv = self.decisions.values
@@ -194,6 +205,8 @@ class Telemetry:
         au = self.audit
         au.links.append((au._latest.get(program_id), program_id, kind,
                          now, info))
+        if len(au.links) >= au._compact_at:
+            au._compact()
         if program_id in self._pinned:
             # rare: only programs with an open pin span need bookkeeping
             if kind in ("unpin", "migrate_out", "rehome_drop") or \
@@ -222,6 +235,32 @@ class Telemetry:
                                      "ttl": rec.ttl, "gain": rec.gain,
                                      "source": rec.source,
                                      "record": rec.id})
+
+    # --------------------------------------------------------- SLO / latency
+    def enable_slo(self, objectives):
+        """Attach a per-tenant burn-rate monitor; its counters/gauges
+        join this registry and alert instants land on the trace's
+        ``slo`` lane."""
+        from repro.obs.slo import SLOMonitor
+        self.slo = SLOMonitor(objectives, self.metrics, self.trace)
+        return self.slo
+
+    def note_ttft(self, replica: str, tenant: str, value: float,
+                  now: float) -> None:
+        self.ttft_seconds.observe(value, (replica,))
+        if self.slo is not None:
+            self.slo.observe(tenant, "ttft", value, now)
+
+    def note_jct(self, replica: str, tenant: str, value: float,
+                 now: float) -> None:
+        self.jct_seconds.observe(value, (replica,))
+        if self.slo is not None:
+            self.slo.observe(tenant, "jct", value, now)
+
+    def live_programs(self) -> set:
+        """Programs with an open lifecycle span or pin — their raw audit
+        chains survive retention compaction."""
+        return set(self._phase) | self._pinned
 
     # --------------------------------------------------- program lifecycle
     def program_phase(self, program_id: str, phase: str, now: float,

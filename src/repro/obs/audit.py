@@ -47,21 +47,42 @@ class AuditRecord:
 
 
 class TTLAudit:
-    def __init__(self, capacity: int = 100_000):
+    def __init__(self, capacity: int = 100_000,
+                 link_capacity: Optional[int] = None):
         self.capacity = capacity
+        # link retention ring: raw links beyond this are compacted away
+        # (after folding into record actions, and skipping live programs
+        # so their chains stay complete); default scales with records —
+        # long-running replays hold memory flat either way
+        self.link_capacity = link_capacity if link_capacity is not None \
+            else 4 * capacity
+        # compaction trigger sits above the capacity so the O(n) sweep
+        # amortizes to O(1) per link
+        self._compact_at = self.link_capacity + \
+            max(self.link_capacity // 4, 1)
         self.records: list[AuditRecord] = []
         # every decision, in order: (record_id|None, program_id, action,
         # ts, detail) — record_id points at the justifying solve
         self.links: list[tuple] = []
+        # program arrivals (program_id, ts): the observed gap between a
+        # solve (tool start) and the next arrival is the program's actual
+        # tool duration — the ground truth the regret analyzer replays
+        # counterfactual TTLs against
+        self.arrivals: list[tuple] = []
         self._latest: dict[str, int] = {}     # program_id -> record id
         self._by_id: dict[int, AuditRecord] = {}
         self._pending: Optional[tuple] = None  # staged solve context
         self._next_id = 0
         self._materialized = 0     # links folded into record actions
         self.dropped = 0
+        self.dropped_links = 0
+        self.dropped_arrivals = 0
         # Telemetry hook: called with each new AuditRecord (metric bump +
         # trace instant); None when the audit runs standalone
         self.sink: Optional[Callable[[AuditRecord], None]] = None
+        # live-program oracle for retention (set by Telemetry): programs
+        # it returns keep their full raw chain across compactions
+        self.live_fn: Optional[Callable[[], set]] = None
 
     # ------------------------------------------------------------- record
     def begin_solve(self, program_id: str, tool: Optional[str],
@@ -91,7 +112,10 @@ class TTLAudit:
             source=decision.source)
         self._next_id += 1
         if len(self.records) >= self.capacity:
-            old = self.records.pop(0)
+            live = self.live_fn() if self.live_fn is not None else ()
+            drop = next((i for i, r in enumerate(self.records)
+                         if r.program_id not in live), 0)
+            old = self.records.pop(drop)
             self._by_id.pop(old.id, None)
             self.dropped += 1
         self.records.append(rec)
@@ -110,6 +134,44 @@ class TTLAudit:
         lazily from the link stream at query time."""
         self.links.append((self._latest.get(program_id), program_id,
                            action, ts, detail))
+        if len(self.links) >= self._compact_at:
+            self._compact()
+
+    def note_arrival(self, program_id: str, ts: float) -> None:
+        """A turn of ``program_id`` entered the queue at ``ts`` (the tool
+        finished). Gives every solve record a ground-truth return gap."""
+        self.arrivals.append((program_id, ts))
+        if len(self.arrivals) >= self._compact_at:
+            self._compact()
+
+    def _compact(self) -> None:
+        """Retention sweep: fold every link into its record's actions
+        (nothing causal is lost), then drop the oldest raw links and
+        arrivals down to ``link_capacity`` — except those of live
+        programs, whose complete chains must survive for ``/audit/<id>``
+        and post-hoc regret analysis."""
+        self._materialize()
+        live = self.live_fn() if self.live_fn is not None else set()
+
+        def _trim(seq: list, pid_of, capacity: int) -> tuple[list, int]:
+            excess = len(seq) - capacity
+            if excess <= 0:
+                return seq, 0
+            kept, dropped = [], 0
+            for item in seq:
+                if dropped < excess and pid_of(item) not in live:
+                    dropped += 1
+                else:
+                    kept.append(item)
+            return kept, dropped
+
+        self.links, d = _trim(self.links, lambda l: l[1],
+                              self.link_capacity)
+        self.dropped_links += d
+        self._materialized = len(self.links)
+        self.arrivals, d = _trim(self.arrivals, lambda a: a[0],
+                                 self.link_capacity)
+        self.dropped_arrivals += d
 
     def _materialize(self) -> None:
         """Fold links recorded since the last query into their records'
@@ -132,7 +194,9 @@ class TTLAudit:
         links = [l for l in self.links if l[1] == program_id]
         return {"program_id": program_id,
                 "records": [r.to_json() for r in recs],
-                "links": links}
+                "links": links,
+                "arrivals": [ts for pid, ts in self.arrivals
+                             if pid == program_id]}
 
     def complete_programs(self) -> list[str]:
         """Programs whose audit chain is complete in the acceptance
@@ -153,5 +217,8 @@ class TTLAudit:
         self._materialize()
         return {"records": [r.to_json() for r in self.records],
                 "links": self.links,
+                "arrivals": self.arrivals,
                 "dropped": self.dropped,
+                "dropped_links": self.dropped_links,
+                "dropped_arrivals": self.dropped_arrivals,
                 "complete_programs": self.complete_programs()}

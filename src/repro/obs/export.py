@@ -68,11 +68,21 @@ def _tracks(events) -> tuple[dict, dict]:
     return track_ids, names
 
 
-def to_chrome(recorder_or_events) -> dict:
+def to_chrome(recorder_or_events, clip_at: Optional[float] = None) -> dict:
     """Convert recorded events (a TraceRecorder or its raw tuples) to a
-    Chrome trace-event document."""
+    Chrome trace-event document.
+
+    ``clip_at`` (virtual seconds) makes a *mid-run* export well-formed:
+    transfer-channel spans are committed at submit time with their end in
+    the virtual future (e.g. a migration still on a PeerLink NIC), so a
+    live export would otherwise contain spans that outrun the clock.
+    Spans straddling the clip are shortened to end exactly at ``clip_at``
+    and marked ``args.truncated = true``; events that have not started
+    yet are dropped. ``None`` (the default) exports verbatim."""
     events = getattr(recorder_or_events, "events", recorder_or_events)
     events = list(events)
+    if clip_at is not None:
+        events = [ev for ev in events if ev[1] <= clip_at]
     track_ids, proc_names = _tracks(events)
     prog_pid = max(proc_names, default=0) if _PROGRAMS in proc_names.values() \
         else None
@@ -103,6 +113,10 @@ def to_chrome(recorder_or_events) -> dict:
             args = {"program": program_id, "info": list(info)}
         elif ph == "X":
             _, ts, dur, track, name, cat, args = ev
+            if clip_at is not None and ts + dur > clip_at:
+                dur = clip_at - ts
+                args = dict(args) if args else {}
+                args["truncated"] = True
             pid, tid, _ = track_ids[track]
             rec = {"ph": "X", "ts": _us(ts), "dur": _us(dur), "pid": pid,
                    "tid": tid, "name": name, "cat": cat}
@@ -113,10 +127,12 @@ def to_chrome(recorder_or_events) -> dict:
         if args:
             rec["args"] = args
         out.append(rec)
+    other = {"generator": "repro.obs",
+             "dropped_events": getattr(recorder_or_events, "dropped", 0)}
+    if clip_at is not None:
+        other["clipped_at"] = round(clip_at, 9)
     return {"traceEvents": out, "displayTimeUnit": "ms",
-            "otherData": {"generator": "repro.obs",
-                          "dropped_events": getattr(recorder_or_events,
-                                                    "dropped", 0)}}
+            "otherData": other}
 
 
 def dumps(doc: dict) -> str:

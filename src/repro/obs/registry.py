@@ -27,7 +27,40 @@ def _fmt(v: float) -> str:
 
 
 def _escape(v: str) -> str:
+    """Label-value escaping per the exposition format: backslash, double
+    quote and newline (in that order — backslash first so the escapes it
+    introduces are not re-escaped)."""
     return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _escape_help(v: str) -> str:
+    """HELP-line escaping: only backslash and newline (quotes are legal
+    verbatim on HELP lines, unlike inside label values)."""
+    return v.replace("\\", "\\\\").replace("\n", "\\n")
+
+
+def _unescape(s: str) -> str:
+    """Inverse of :func:`_escape` / :func:`_escape_help`."""
+    out, i, n = [], 0, len(s)
+    while i < n:
+        c = s[i]
+        if c == "\\" and i + 1 < n:
+            nxt = s[i + 1]
+            if nxt == "\\":
+                out.append("\\")
+                i += 2
+                continue
+            if nxt == '"':
+                out.append('"')
+                i += 2
+                continue
+            if nxt == "n":
+                out.append("\n")
+                i += 2
+                continue
+        out.append(c)
+        i += 1
+    return "".join(out)
 
 
 class _Metric:
@@ -179,7 +212,7 @@ class MetricsRegistry:
         lines = []
         for name in sorted(self.metrics):
             m = self.metrics[name]
-            lines.append(f"# HELP {name} {m.help}")
+            lines.append(f"# HELP {name} {_escape_help(m.help)}")
             lines.append(f"# TYPE {name} {m.kind}")
             lines.extend(m.expose())
         return "\n".join(lines) + "\n"
@@ -190,3 +223,111 @@ class MetricsRegistry:
         return {name: {"type": m.kind, "help": m.help,
                        "labels": list(m.labelnames), "values": m.snap()}
                 for name, m in sorted(self.metrics.items())}
+
+
+# --------------------------------------------------------------- parsing
+def _parse_sample(line: str) -> tuple[str, dict, float]:
+    """One sample line -> (name, labels, value). Label values are scanned
+    character-wise so escaped quotes/backslashes/newlines round-trip."""
+    brace = line.find("{")
+    if brace == -1:
+        name, _, val = line.partition(" ")
+        return name, {}, float(val)
+    name = line[:brace]
+    labels: dict[str, str] = {}
+    i = brace + 1
+    while line[i] != "}":
+        eq = line.index("=", i)
+        lname = line[i:eq]
+        assert line[eq + 1] == '"', line
+        j = eq + 2
+        buf = []
+        while line[j] != '"':
+            if line[j] == "\\" and j + 1 < len(line):
+                buf.append({"\\": "\\", '"': '"', "n": "\n"}.get(
+                    line[j + 1], line[j + 1]))
+                j += 2
+            else:
+                buf.append(line[j])
+                j += 1
+        labels[lname] = "".join(buf)
+        i = j + 1
+        if line[i] == ",":
+            i += 1
+    val = line[i + 1:].strip()
+    return name, labels, float(val)
+
+
+def parse_exposition(text: str) -> dict:
+    """Parse Prometheus text exposition back into metric families:
+    ``{family: {"type": ..., "help": ..., "samples": [{"name", "labels",
+    "value"}, ...]}}``. Histogram ``_bucket`` / ``_sum`` / ``_count``
+    samples attach to their family. The CI ``http-smoke`` job and the
+    round-trip test both consume this — it must accept exactly what
+    :meth:`MetricsRegistry.exposition` emits."""
+    fams: dict[str, dict] = {}
+    for line in text.splitlines():
+        if not line.strip():
+            continue
+        if line.startswith("# HELP "):
+            name, _, help_ = line[len("# HELP "):].partition(" ")
+            fams.setdefault(name, {"samples": []})["help"] = _unescape(help_)
+        elif line.startswith("# TYPE "):
+            name, _, kind = line[len("# TYPE "):].partition(" ")
+            fams.setdefault(name, {"samples": []})["type"] = kind.strip()
+        elif line.startswith("#"):
+            continue
+        else:
+            name, labels, value = _parse_sample(line)
+            fam = name
+            if fam not in fams:
+                for suffix in ("_bucket", "_sum", "_count"):
+                    if name.endswith(suffix) and name[:-len(suffix)] in fams:
+                        fam = name[:-len(suffix)]
+                        break
+            fams.setdefault(fam, {"samples": []})["samples"].append(
+                {"name": name, "labels": labels, "value": value})
+    return fams
+
+
+# ----------------------------------------------------------- aggregation
+def _drop_key(key: tuple, idx: Optional[int]) -> tuple:
+    if idx is None:
+        return key
+    return key[:idx] + key[idx + 1:]
+
+
+def aggregate(registry: MetricsRegistry,
+              drop_label: str = "replica") -> MetricsRegistry:
+    """Fleet view: a new registry with ``drop_label`` removed from every
+    metric and same-key children summed across it (counters and histogram
+    buckets add; gauges report fleet totals — occupancy-style gauges sum
+    meaningfully, ETAs read as aggregate backlog). Deterministic: child
+    ordering is re-derived from the merged keys at exposition time."""
+    registry.collect()
+    out = MetricsRegistry()
+    for name, m in registry.metrics.items():
+        if drop_label in m.labelnames:
+            idx = m.labelnames.index(drop_label)
+            names = tuple(n for n in m.labelnames if n != drop_label)
+        else:
+            idx, names = None, m.labelnames
+        if isinstance(m, Histogram):
+            h = out.histogram(name, m.help, names, buckets=m.buckets)
+            for key, counts in m.counts.items():
+                k = _drop_key(key, idx)
+                cur = h.counts.get(k)
+                if cur is None:
+                    h.counts[k] = list(counts)
+                    h.sums[k] = m.sums[key]
+                else:
+                    for i, c in enumerate(counts):
+                        cur[i] += c
+                    h.sums[k] += m.sums[key]
+        else:
+            agg = out.gauge(name, m.help, names) if isinstance(m, Gauge) \
+                else out.counter(name, m.help, names)
+            for key, v in m.values.items():
+                k = _drop_key(key, idx)
+                agg.values[k] = agg.values.get(k, 0.0) + v
+    return out

@@ -34,6 +34,10 @@ class TraceRecorder:
         self.capacity = capacity
         self.events: deque = deque(maxlen=capacity)
         self.dropped = 0                  # ring overwrites (oldest lost)
+        # monotone push counter: event i in the ring has sequence number
+        # seq - len(events) + i + 1, so live consumers (the SSE /events
+        # stream) can cursor through the ring without re-reading it
+        self.seq = 0
 
     def __len__(self) -> int:
         return len(self.events)
@@ -41,7 +45,23 @@ class TraceRecorder:
     def _push(self, ev: tuple) -> None:
         if len(self.events) == self.capacity:
             self.dropped += 1
+        self.seq += 1
         self.events.append(ev)
+
+    def tail(self, since: int) -> tuple[list[tuple], int]:
+        """Events pushed after sequence number ``since`` (clamped to the
+        ring: anything older than ``seq - len(events)`` was overwritten).
+        Returns ``(events, new_cursor)``; pass ``new_cursor`` back on the
+        next call. Event ``i`` of the returned list has sequence number
+        ``new_cursor - len(events) + i + 1``."""
+        seq = self.seq
+        oldest = seq - len(self.events)
+        if since < oldest:
+            since = oldest
+        if since >= seq:
+            return [], seq
+        evs = list(self.events)
+        return evs[len(evs) - (seq - since):], seq
 
     # ------------------------------------------------------------- lanes
     def instant(self, track: str, name: str, ts: float, cat: str = "event",

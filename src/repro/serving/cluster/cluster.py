@@ -132,6 +132,18 @@ class Cluster:
         for e in self.engines:
             e.attach_telemetry(tel)
 
+    def export_trace(self, now: Optional[float] = None) -> dict:
+        """Perfetto document of the attached plane, clipped at ``now``
+        (default: the shared cluster clock) so an export taken while a
+        migration is still on a PeerLink renders its NIC spans truncated
+        at the clock instead of running into the virtual future — the
+        live ``/traces`` endpoint and mid-run snapshots both use this."""
+        assert self.obs is not None, "attach_telemetry first"
+        from repro.obs import export as obs_export
+        return obs_export.to_chrome(self.obs.trace,
+                                    clip_at=self.clock.now
+                                    if now is None else now)
+
     def _pump_links(self, now: float) -> None:
         """Arrival pump: migrations whose flight ended become plain target
         tier residents (the in-flight protection pin is released)."""

@@ -436,8 +436,12 @@ class Engine:
                     if self.obs is not None:
                         self.obs.program_end(r.program_id, end)
                         self.obs.programs_finished.inc(1.0, (self.engine_id,))
-                        self.obs.jct_seconds.observe(ps.jct,
-                                                     (self.engine_id,))
+                        # tenant identity rides on the shared-prefix id
+                        # (the skewed workload encodes tenants there);
+                        # feeds the JCT histogram + per-tenant SLO burn
+                        self.obs.note_jct(self.engine_id,
+                                          r.shared_prefix_id or "default",
+                                          ps.jct, end)
                 else:
                     ev.tool_started.append((r, r.tool))
                     ps.total_tool_time += r.tool_duration
@@ -464,8 +468,9 @@ class Engine:
             if ps is not None:
                 ps.total_ttft += at - r.arrival_time
             if self.obs is not None:
-                self.obs.ttft_seconds.observe(at - r.arrival_time,
-                                              (self.engine_id,))
+                self.obs.note_ttft(self.engine_id,
+                                   r.shared_prefix_id or "default",
+                                   at - r.arrival_time, at)
 
     # ------------------------------------------------------- routing signals
     def prefix_match_tokens(self, req: Request) -> int:

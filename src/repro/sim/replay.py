@@ -617,6 +617,74 @@ def run_telemetry_demo(seed: int, out_dir,
     return verdict
 
 
+def run_regret_demo(seed: int, out_dir,
+                    rc: Optional[ReplayConfig] = None,
+                    replicas: int = 3,
+                    router: str = "kv_aware_migrate",
+                    n: int = 24, rate_jps: float = 6.0) -> dict:
+    """The ISSUE's counterfactual-regret scenario: a *dense* skewed
+    cluster trace (heavier than the telemetry demo: per-replica queueing
+    is sustained, so retention genuinely pays and the TTL solver's
+    per-tool adaptivity matters) replayed through
+    :func:`repro.obs.regret.analyze`. Gates on three things:
+
+    - Continuum's solved TTL beats every fixed-TTL counterfactual *and*
+      evict-always on total regret (``continuum_beats_all_fixed``);
+    - a second same-seed run produces a byte-identical regret report;
+    - the ``/metrics`` scrape fetched over a live :class:`ObsServer` is
+      byte-identical across the two runs.
+
+    Writes ``regret.json``, ``metrics.prom`` and ``verdict.json`` to
+    ``out_dir``; returns the verdict dict."""
+    import urllib.request
+
+    from repro.obs import regret as obs_regret
+    from repro.obs.server import ObsServer
+    if rc is None:
+        # long max_ttl: the fixed-TTL sweep and the solver both get room
+        # to hold KV across multi-second tool storms
+        rc = dataclasses.replace(ReplayConfig(), max_ttl=8.0)
+    progs = cluster_programs(seed, n=n, rate_jps=rate_jps)
+
+    def one_run():
+        _, _, cluster = run_cluster_trace(progs, rc, replicas, router,
+                                          telemetry=True)
+        report = obs_regret.analyze(cluster.obs.audit.to_json())
+        srv = ObsServer(cluster.obs,
+                        clock=lambda: cluster.clock.now).start()
+        try:
+            with urllib.request.urlopen(srv.url("/metrics")) as resp:
+                prom = resp.read().decode()
+        finally:
+            srv.stop()
+        return report, obs_regret.dumps(report), prom
+
+    report, bytes_a, prom_a = one_run()
+    _, bytes_b, prom_b = one_run()
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "regret.json").write_text(bytes_a)
+    (out / "metrics.prom").write_text(prom_a)
+    verdict = {
+        "seed": seed, "replicas": replicas, "router": router,
+        "n_programs": n, "rate_jps": rate_jps, "max_ttl": rc.max_ttl,
+        "n_decisions": report["n_decisions"],
+        "ranking": report["ranking"],
+        "total_regret_s": {p: report["policies"][p]["total_regret_s"]
+                           for p in report["policies"]},
+        "continuum_beats_all_fixed": report["continuum_beats_all_fixed"],
+        "report_deterministic": bytes_a == bytes_b,
+        "metrics_deterministic": prom_a == prom_b,
+        "artifacts": {"regret": str(out / "regret.json"),
+                      "metrics_prom": str(out / "metrics.prom")},
+        "ok": (report["continuum_beats_all_fixed"]
+               and bytes_a == bytes_b and prom_a == prom_b),
+    }
+    (out / "verdict.json").write_text(
+        json.dumps(verdict, indent=2, sort_keys=True) + "\n")
+    return verdict
+
+
 # ----------------------------------------------------------------- CLI
 def main(argv=None) -> int:
     import argparse
@@ -645,11 +713,31 @@ def main(argv=None) -> int:
                          "trace + metrics + TTL audit and gates on "
                          "schema validity, byte-identical same-seed "
                          "export and a complete audit chain")
+    ap.add_argument("--regret", action="store_true",
+                    help="regret mode: dense seeded cluster run replayed "
+                         "under counterfactual TTL policies (oracle, "
+                         "evict-always, pin-forever, fixed sweep); gates "
+                         "on Continuum beating every fixed TTL and "
+                         "evict-always, plus byte-identical same-seed "
+                         "regret report and /metrics scrape")
     args = ap.parse_args(argv)
     out = pathlib.Path(args.out)
     out.mkdir(parents=True, exist_ok=True)
     failed = False
     for seed in args.seeds:
+        if args.regret:
+            verdict = run_regret_demo(seed, out / f"seed{seed}",
+                                      replicas=args.replicas,
+                                      router=args.router)
+            print(f"regret seed {seed}: "
+                  f"{'OK' if verdict['ok'] else 'FAIL'} "
+                  f"(decisions={verdict['n_decisions']}, "
+                  f"beats_all_fixed="
+                  f"{verdict['continuum_beats_all_fixed']}, "
+                  f"ranking={verdict['ranking'][:3]}, "
+                  f"deterministic={verdict['report_deterministic'] and verdict['metrics_deterministic']})")
+            failed |= not verdict["ok"]
+            continue
         if args.telemetry:
             verdict = run_telemetry_demo(
                 seed, out / f"seed{seed}", ReplayConfig(),

@@ -73,6 +73,56 @@ class TestRegistry:
         with pytest.raises(AssertionError):
             reg.gauge("m", "h")
 
+    def test_exposition_roundtrip_nasty_labels_and_help(self):
+        from repro.obs.registry import parse_exposition
+        reg = MetricsRegistry()
+        help_text = 'rate of \\"weird\\ tools\nsecond line'
+        c = reg.counter("nasty_total", help_text, ("tool",))
+        c.inc(1.5, ('a"b\\c\nd',))
+        c.inc(2.0, ("plain",))
+        h = reg.histogram("lat_seconds", "h", ("q",), buckets=(0.1, 1.0))
+        h.observe(0.5, ('x"y',))
+        text = reg.exposition()
+        # HELP escapes backslash+newline only; quotes stay verbatim
+        assert '# HELP nasty_total rate of \\\\"weird\\\\ tools\\nsecond ' \
+            "line" in text
+        fams = parse_exposition(text)
+        assert fams["nasty_total"]["help"] == help_text
+        assert fams["nasty_total"]["type"] == "counter"
+        by_label = {s["labels"]["tool"]: s["value"]
+                    for s in fams["nasty_total"]["samples"]}
+        assert by_label == {'a"b\\c\nd': 1.5, "plain": 2.0}
+        # histogram child samples attach to their family
+        hist = fams["lat_seconds"]
+        names = {s["name"] for s in hist["samples"]}
+        assert names == {"lat_seconds_bucket", "lat_seconds_sum",
+                         "lat_seconds_count"}
+        assert all(s["labels"]["q"] == 'x"y' for s in hist["samples"])
+
+    def test_fleet_aggregation_drops_replica_and_sums(self):
+        from repro.obs.registry import aggregate
+        reg = MetricsRegistry()
+        c = reg.counter("dec_total", "h", ("replica", "kind"))
+        c.inc(2.0, ("r0", "admit"))
+        c.inc(3.0, ("r1", "admit"))
+        c.inc(1.0, ("r1", "evict"))
+        g = reg.gauge("occ", "h", ("replica",))
+        g.set(5.0, ("r0",))
+        g.set(7.0, ("r1",))
+        h = reg.histogram("lat", "h", ("replica",), buckets=(1.0,))
+        h.observe(0.5, ("r0",))
+        h.observe(2.0, ("r1",))
+        fleet = aggregate(reg)
+        assert fleet.metrics["dec_total"].values == \
+            {("admit",): 5.0, ("evict",): 1.0}
+        assert fleet.metrics["occ"].kind == "gauge"
+        assert fleet.metrics["occ"].values == {(): 12.0}
+        fh = fleet.metrics["lat"]
+        assert fh.counts[()] == [1, 1] and fh.sums[()] == \
+            pytest.approx(2.5)
+        # no replica label anywhere in the fleet exposition
+        assert "replica=" not in fleet.exposition()
+
 
 class TestTrace:
     def test_ring_capacity_and_dropped(self):
@@ -184,6 +234,49 @@ class TestAudit:
         doc = json.loads(json.dumps(au.to_json()))
         assert doc["records"][0]["ttl"] == 3.0
         assert doc["dropped"] == 0
+        assert doc["arrivals"] == [] and doc["dropped_links"] == 0
+
+    def test_link_ring_memory_flat_preserves_live_chains(self):
+        from repro.core.ttl import TTLDecision
+        au = TTLAudit(capacity=8, link_capacity=16)
+        au.live_fn = lambda: {"keep"}
+        au.begin_solve("keep", "ls", 0, 0.0, replica="r0")
+        au.record_solve("ls", 1.0, 0.5,
+                        TTLDecision(ttl=2.0, gain=0.5, source="per_tool",
+                                    prefill_reload=1.0, eta=0.4,
+                                    t_bar=1.0))
+        au.link("keep", "pin", 0.0, (0, 2.0))
+        au.note_arrival("keep", 0.5)
+        # flood of dead-program traffic far beyond the retention ring
+        for i in range(500):
+            au.link(f"dead{i}", "admit", 1.0 + i, (0, "none"))
+            au.note_arrival(f"dead{i}", 1.0 + i)
+        # memory stays flat: never more than the compaction trigger
+        assert len(au.links) <= au._compact_at
+        assert len(au.arrivals) <= au._compact_at
+        assert au.dropped_links > 0 and au.dropped_arrivals > 0
+        # the live program's complete raw chain survived every sweep
+        chain = au.chain("keep")
+        assert [l[2] for l in chain["links"]] == ["pin"]
+        assert chain["arrivals"] == [0.5]
+        assert [a[0] for a in chain["records"][0]["actions"]] == ["pin"]
+        # accounting: everything ever appended is either kept or counted
+        assert au.dropped_links + len(au.links) == 501
+        assert au.dropped_arrivals + len(au.arrivals) == 501
+
+    def test_record_ring_skips_live_programs(self):
+        from repro.core.ttl import TTLDecision
+        au = TTLAudit(capacity=2)
+        au.live_fn = lambda: {"live"}
+        dec = TTLDecision(ttl=1.0, gain=0.1, source="global",
+                          prefill_reload=0.5, eta=0.2, t_bar=1.0)
+        for pid in ("live", "dead0", "dead1"):
+            au.begin_solve(pid, "ls", 0, 1.0)
+            au.record_solve("ls", 0.5, None, dec)
+        # capacity 2: one eviction happened, and it skipped the live
+        # program even though it was oldest
+        assert au.dropped == 1
+        assert [r.program_id for r in au.records] == ["live", "dead1"]
 
 
 class TestDecisionParityFuzz:
@@ -256,6 +349,42 @@ class TestClusterTelemetry:
         text = tel.metrics.exposition()
         assert "continuum_sched_decisions_total" in text
         assert "continuum_jct_seconds_count" in text
+
+    def test_midflight_migration_span_clips_well_formed(self):
+        """PeerLink commits its channel spans at submit time with their
+        *future* end; an export clipped mid-transfer must still render a
+        well-formed span — truncated exactly at the clip, flagged, and
+        schema-valid (the /traces endpoint's contract)."""
+        progs = cluster_programs(0, n=16, rate_jps=3.0)
+        _, _, cluster = run_cluster_trace(
+            progs, ReplayConfig(), replicas=3, telemetry=True)
+        tel = cluster.obs
+        peer = [e for e in tel.trace.events
+                if e[0] == "X" and "peer" in e[3]]
+        assert peer                         # the workload migrated
+        ev = peer[len(peer) // 2]
+        clip = ev[1] + ev[2] / 2            # mid-flight for this span
+        doc = to_chrome(tel.trace, clip_at=clip)
+        assert validate(doc) == []
+        assert doc["otherData"]["clipped_at"] == round(clip, 9)
+        clip_us = clip * 1e6
+        spans = [e for e in doc["traceEvents"] if e.get("ph") == "X"]
+        cut = [e for e in spans if e["args"].get("truncated")]
+        assert cut                          # the straddler was clipped
+        for e in cut:
+            assert e["ts"] + e["dur"] == pytest.approx(clip_us, abs=1e-2)
+        for e in doc["traceEvents"]:
+            if e.get("ph") != "M":
+                assert e["ts"] <= clip_us + 1e-2
+            if e.get("ph") == "X":
+                assert e["ts"] + e["dur"] <= clip_us + 1e-2
+        # our chosen peer span is among the truncated ones
+        assert any(e["ts"] == pytest.approx(ev[1] * 1e6, abs=1e-2) and
+                   e["name"] == "xfer" for e in cut)
+        # the full export still carries it unclipped
+        full = to_chrome(tel.trace)
+        assert "clipped_at" not in full["otherData"]
+        assert cluster.export_trace(now=clip) == doc
 
     def test_telemetry_demo_verdict(self, tmp_path):
         verdict = run_telemetry_demo(0, tmp_path / "demo", replicas=2)

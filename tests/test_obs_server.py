@@ -1,0 +1,165 @@
+"""Live HTTP front door (repro.obs.server.ObsServer).
+
+One seeded engine run feeds a module-scoped Telemetry plane; every test
+scrapes it over real HTTP (stdlib urllib against an ephemeral port).
+Covers: /healthz, /metrics byte-identity with the in-process exposition
+and across scrapes, fleet aggregation dropping the replica label,
+clipped vs full /traces exports, per-program audit chains with 404 on
+unknown ids, the SSE /events cursor protocol, and /slo presence/absence.
+"""
+import json
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.export import validate
+from repro.obs.registry import parse_exposition
+from repro.obs.server import ObsServer
+from repro.obs.slo import default_objectives
+from repro.sim.replay import ReplayConfig, run_engine, seeded_programs
+
+
+def _get(url: str) -> tuple[int, bytes, dict]:
+    with urllib.request.urlopen(url, timeout=10) as r:
+        return r.status, r.read(), dict(r.headers)
+
+
+@pytest.fixture(scope="module")
+def plane():
+    tel = Telemetry()
+    tel.enable_slo(default_objectives(ttft_target_s=2.0))
+    run_engine(seeded_programs(0, n=4, twins=False), ReplayConfig(),
+               physical=False, telemetry=tel)
+    return tel
+
+
+@pytest.fixture(scope="module")
+def server(plane):
+    # clip mid-run: half the newest event's timestamp, so /traces has
+    # both sides of the clip to exercise
+    horizon = max(e[1] for e in plane.trace.events)
+    srv = ObsServer(plane, clock=lambda: horizon / 2).start()
+    yield srv
+    srv.stop()
+
+
+class TestHealthz:
+    def test_summary(self, plane, server):
+        code, body, _ = _get(server.url("/healthz"))
+        out = json.loads(body)
+        assert code == 200 and out["status"] == "ok"
+        assert out["trace_events"] == len(plane.trace.events)
+        assert out["audit_records"] == len(plane.audit.records)
+        assert out["slo"] is True
+        assert out["virtual_now"] > 0
+
+    def test_unknown_path_404(self, server):
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(server.url("/nope"))
+        assert exc.value.code == 404
+
+
+class TestMetrics:
+    def test_scrape_matches_in_process_and_is_stable(self, plane, server):
+        _, a, headers = _get(server.url("/metrics"))
+        _, b, _ = _get(server.url("/metrics"))
+        assert a == b                                   # idle plane: stable
+        assert a.decode() == plane.metrics.exposition()
+        assert headers["Content-Type"].startswith("text/plain")
+        assert int(headers["Content-Length"]) == len(a)
+
+    def test_fleet_view_aggregates_replica_away(self, plane, server):
+        _, body, _ = _get(server.url("/metrics?view=fleet"))
+        fleet = parse_exposition(body.decode())
+        per = parse_exposition(plane.metrics.exposition())
+        assert not any("replica" in s["labels"]
+                       for f in fleet.values() for s in f["samples"])
+        # counters sum across the dropped label, e.g. decisions by kind
+        fam = "continuum_sched_decisions_total"
+        want = {}
+        for s in per[fam]["samples"]:
+            want[s["labels"]["kind"]] = \
+                want.get(s["labels"]["kind"], 0) + s["value"]
+        got = {s["labels"]["kind"]: s["value"]
+               for s in fleet[fam]["samples"]}
+        assert got == want
+
+
+class TestTraces:
+    def test_clipped_by_default_full_on_request(self, plane, server):
+        _, clipped, headers = _get(server.url("/traces"))
+        _, full, _ = _get(server.url("/traces?full=1"))
+        assert "attachment" in headers["Content-Disposition"]
+        cdoc, fdoc = json.loads(clipped), json.loads(full)
+        assert validate(cdoc) == [] and validate(fdoc) == []
+        clip_us = cdoc["otherData"]["clipped_at"] * 1e6
+        reals = [e for e in cdoc["traceEvents"] if e["ph"] != "M"]
+        assert reals and all(e["ts"] <= clip_us + 1e-6 for e in reals)
+        assert "clipped_at" not in fdoc["otherData"]
+        assert len(fdoc["traceEvents"]) > len(cdoc["traceEvents"])
+
+
+class TestAuditEndpoint:
+    def test_summary_and_chain(self, plane, server):
+        _, body, _ = _get(server.url("/audit"))
+        summary = json.loads(body)
+        assert summary["records"] == len(plane.audit.records)
+        pid = plane.audit.records[0].program_id
+        _, body, _ = _get(server.url(f"/audit/{pid}"))
+        chain = json.loads(body)
+        assert chain["program_id"] == pid
+        assert chain["records"] and chain["links"]
+        assert chain == json.loads(json.dumps(plane.audit.chain(pid)))
+
+    def test_unknown_program_404(self, server):
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(server.url("/audit/no-such-program"))
+        assert exc.value.code == 404
+        assert "unknown program" in json.loads(exc.value.read())["error"]
+
+
+class TestEvents:
+    def test_sse_replays_ring_with_sequence_ids(self, plane, server):
+        _, body, _ = _get(server.url("/events?limit=5&poll=0"))
+        frames = [f for f in body.decode().split("\n\n") if "data:" in f]
+        assert len(frames) == 5
+        ids, events = [], []
+        for f in frames:
+            for line in f.splitlines():
+                if line.startswith("id: "):
+                    ids.append(int(line[4:]))
+                elif line.startswith("data: "):
+                    events.append(json.loads(line[6:]))
+        assert ids == list(range(ids[0], ids[0] + 5))   # dense cursor
+        # the stream replays the ring verbatim, oldest first
+        assert events == [json.loads(json.dumps(list(ev)))
+                          for ev in list(plane.trace.events)[:5]]
+
+    def test_cursor_resume(self, plane, server):
+        _, body, _ = _get(server.url("/events?limit=2&poll=0"))
+        first_ids = [int(l[4:]) for l in body.decode().splitlines()
+                     if l.startswith("id: ")]
+        nxt = first_ids[-1]
+        _, body, _ = _get(server.url(f"/events?limit=2&poll=0&from={nxt}"))
+        resumed = [int(l[4:]) for l in body.decode().splitlines()
+                   if l.startswith("id: ")]
+        assert resumed[0] == nxt + 1
+
+
+class TestSLOEndpoint:
+    def test_status_when_enabled(self, plane, server):
+        _, body, _ = _get(server.url("/slo"))
+        out = json.loads(body)
+        assert out["objectives"][0]["metric"] == "ttft"
+        assert out == json.loads(json.dumps(plane.slo.status()))
+
+    def test_404_when_disabled(self):
+        srv = ObsServer(Telemetry()).start()
+        try:
+            with pytest.raises(urllib.error.HTTPError) as exc:
+                _get(srv.url("/slo"))
+            assert exc.value.code == 404
+        finally:
+            srv.stop()

@@ -1,0 +1,142 @@
+"""Counterfactual TTL regret analyzer (repro.obs.regret).
+
+Exact-math checks on a hand-built audit log (every policy's benefit,
+regret, held time and hit/miss verified against the closed forms), the
+never-returned horizon charge, ranking/tie-break determinism, the
+byte-stable ``dumps`` contract, and the CLI round-trip.
+"""
+import json
+import math
+
+import pytest
+
+from repro.obs.regret import (DEFAULT_FIXED_TTLS, analyze, benefit, dumps,
+                              gain_of, main)
+
+
+def _audit():
+    """Two decisions with closed-form regret.
+
+    pA: solve at t=10 with G = 1.0*0.5 + 2.0 = 2.5, tau*=1.0; the tool
+    actually takes 1.5 s (arrival at 11.5) -> continuum misses by 0.5 s.
+    The turn is then admitted cold at 11.9 (queued 0.4 s, full prefill
+    recomputed).
+
+    pB: solve at t=20 with G = 2.0*1.0 + 0.5 = 2.5, tau*=2.0; the
+    program never returns. The last audit timestamp (an evict link at
+    21.0) sets the horizon, so any hold is charged at most 1.0 s.
+    """
+    return {
+        "records": [
+            {"id": 0, "ts": 10.0, "program_id": "pA", "replica": "r0",
+             "turn_idx": 1, "tool": "ls",
+             "inputs": {"prefill_reload": 2.0, "queue_eta": 1.0,
+                        "eta": 0.5, "t_bar": 3.0,
+                        "n_tool_records": 5, "n_global_records": 9},
+             "ttl": 1.0, "gain": 2.5, "source": "per_tool",
+             "actions": [["pin", 10.0, [1, 1.0]],
+                         ["admit", 11.9, [1, "none", 0]]]},
+            {"id": 1, "ts": 20.0, "program_id": "pB", "replica": "r1",
+             "turn_idx": 0, "tool": "web",
+             "inputs": {"prefill_reload": 0.5, "queue_eta": None,
+                        "eta": 1.0, "t_bar": 2.0,
+                        "n_tool_records": 0, "n_global_records": 3},
+             "ttl": 2.0, "gain": 2.5, "source": "global", "actions": []},
+        ],
+        "links": [[None, "pB", "evict", 21.0, []]],
+        "arrivals": [["pA", 11.5]],
+        "dropped": 0, "dropped_links": 0, "dropped_arrivals": 0,
+        "complete_programs": [],
+    }
+
+
+class TestPrimitives:
+    def test_gain_prefers_queue_eta_over_t_bar(self):
+        assert gain_of({"prefill_reload": 2.0, "queue_eta": 1.0,
+                        "eta": 0.5, "t_bar": 99.0}) == pytest.approx(2.5)
+        assert gain_of({"prefill_reload": 0.5, "queue_eta": None,
+                        "eta": 1.0, "t_bar": 2.0}) == pytest.approx(2.5)
+
+    def test_benefit_closed_forms(self):
+        assert benefit(2.5, 1.0, 1.5, 100.0) == pytest.approx(-1.0)  # miss
+        assert benefit(2.5, 3.0, 1.5, 100.0) == pytest.approx(1.0)   # hit
+        assert benefit(2.5, 0.0, 1.5, 100.0) == pytest.approx(0.0)   # evict
+        # never returned: hold charged up to the horizon cap
+        assert benefit(2.5, 2.0, None, 1.0) == pytest.approx(-1.0)
+        assert benefit(2.5, math.inf, None, 1.0) == pytest.approx(-1.0)
+
+
+class TestAnalyze:
+    def _report(self):
+        return analyze(_audit(), fixed_ttls=(0.5, 3.0))
+
+    def test_policy_totals_exact(self):
+        pol = self._report()["policies"]
+        # pA: oracle 1.0; pB: oracle 0 (never returned)
+        assert pol["oracle"]["total_regret_s"] == pytest.approx(0.0)
+        assert pol["oracle"]["total_benefit_s"] == pytest.approx(1.0)
+        # continuum: pA miss (-1.0, regret 2.0) + pB hold-to-horizon
+        # (-1.0, regret 1.0)
+        assert pol["continuum"]["total_benefit_s"] == pytest.approx(-2.0)
+        assert pol["continuum"]["total_regret_s"] == pytest.approx(3.0)
+        assert pol["continuum"]["hits"] == 0
+        assert pol["continuum"]["misses"] == 2
+        assert pol["continuum"]["held_s"] == pytest.approx(2.0)
+        assert pol["evict_always"]["total_regret_s"] == pytest.approx(1.0)
+        assert pol["pin_forever"]["total_regret_s"] == pytest.approx(1.0)
+        assert pol["pin_forever"]["held_s"] == pytest.approx(2.5)
+        assert pol["fixed_0.5"]["total_regret_s"] == pytest.approx(2.0)
+        assert pol["fixed_3"]["total_regret_s"] == pytest.approx(1.0)
+        assert pol["fixed_3"]["hits"] == 1
+
+    def test_ranking_and_verdict(self):
+        rep = self._report()
+        # ties (evict_always, fixed_3, pin_forever at 1.0) break by name
+        assert rep["ranking"] == ["oracle", "evict_always", "fixed_3",
+                                  "pin_forever", "fixed_0.5", "continuum"]
+        assert rep["continuum_beats_all_fixed"] is False
+        assert rep["n_decisions"] == 2 and rep["n_returned"] == 1
+        assert rep["horizon_s"] == pytest.approx(21.0)
+
+    def test_realized_attribution(self):
+        rep = self._report()
+        # pA admitted cold: whole avoided prefill comes back as recompute,
+        # plus 0.4 s queueing between return (11.5) and admit (11.9)
+        assert rep["realized"]["hits"] == 0
+        assert rep["realized"]["misses"] == 1   # pB never admitted again
+        assert rep["realized"]["recompute_s"] == pytest.approx(2.0)
+        assert rep["realized"]["queue_s"] == pytest.approx(0.4)
+        pa = rep["per_program"]["pA"]
+        assert pa["regret_s"]["continuum"] == pytest.approx(2.0)
+
+    def test_worst_decisions_sorted(self):
+        worst = self._report()["worst_decisions"]
+        assert [w["record_id"] for w in worst] == [0, 1]
+        assert worst[0]["regret_s"] == pytest.approx(2.0)
+        assert worst[0]["gap_s"] == pytest.approx(1.5)
+        assert worst[1]["gap_s"] is None
+
+    def test_dumps_byte_stable_and_json_safe(self):
+        a, b = dumps(analyze(_audit())), dumps(analyze(_audit()))
+        assert a == b
+        # pin_forever's inf TTL must never leak into the report
+        json.loads(a)
+
+    def test_default_fixed_sweep(self):
+        rep = analyze(_audit())
+        assert rep["fixed_ttls"] == list(DEFAULT_FIXED_TTLS)
+        for t in DEFAULT_FIXED_TTLS:
+            assert f"fixed_{t:g}" in rep["policies"]
+
+
+class TestCLI:
+    def test_main_roundtrip(self, tmp_path):
+        src = tmp_path / "audit.json"
+        out = tmp_path / "regret.json"
+        src.write_text(json.dumps(_audit()))
+        assert main([str(src), "-o", str(out),
+                     "--fixed-ttls", "0.5", "3.0"]) == 0
+        rep = json.loads(out.read_text())
+        assert rep["ranking"][0] == "oracle"
+        assert out.read_text() == dumps(analyze(_audit(),
+                                                fixed_ttls=(0.5, 3.0)))

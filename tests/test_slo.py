@@ -1,0 +1,142 @@
+"""Per-tenant SLO burn-rate monitoring (repro.obs.slo).
+
+Window math against hand-fed observations (burn = violation fraction /
+error budget), the multi-window alert state machine (fire only when both
+windows burn, resolve when both recover) with its counter and trace
+side effects, and the engine integration: TTFT/JCT observations flow
+from the engine through Telemetry.note_ttft/note_jct keyed by tenant.
+"""
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.registry import MetricsRegistry
+from repro.obs.slo import SLOMonitor, SLOObjective, default_objectives
+from repro.obs.trace import TraceRecorder
+from repro.sim.replay import ReplayConfig, run_engine, seeded_programs
+
+
+def _obj(**kw):
+    base = dict(metric="ttft", target_s=1.0, objective=0.9,
+                short_window_s=10.0, long_window_s=40.0,
+                burn_threshold=2.0)
+    base.update(kw)
+    return SLOObjective(**base)
+
+
+class TestObjectives:
+    def test_name_encodes_percentile(self):
+        assert _obj().name == "ttft_p90"
+        assert _obj(metric="jct", objective=0.95).name == "jct_p95"
+
+    def test_default_objectives_optional(self):
+        objs = default_objectives(ttft_target_s=2.0)
+        assert [o.metric for o in objs] == ["ttft"]
+        objs = default_objectives(ttft_target_s=2.0, jct_target_s=60.0,
+                                  objective=0.99)
+        assert [o.metric for o in objs] == ["ttft", "jct"]
+        assert all(o.objective == 0.99 for o in objs)
+        assert default_objectives() == []
+
+
+class TestBurnRate:
+    def _monitor(self):
+        reg = MetricsRegistry()
+        tr = TraceRecorder()
+        return SLOMonitor([_obj()], reg, trace=tr), reg, tr
+
+    def test_compliant_traffic_never_burns(self):
+        mon, reg, tr = self._monitor()
+        for i in range(20):
+            mon.observe("t0", "ttft", 0.5, float(i))
+        t = next(s for s in mon.status()["tenants"])
+        assert t["burn_short"] == 0.0 and t["burn_long"] == 0.0
+        assert not t["alerting"]
+        assert mon.alerts.values == {}
+        assert not [e for e in tr.events if e[3] == "slo_alert"]
+
+    def test_alert_needs_both_windows_and_resolves(self):
+        mon, reg, tr = self._monitor()
+        # 8 compliant then 3 breaching: both windows cross the burn
+        # threshold together and exactly one alert fires
+        for i in range(8):
+            mon.observe("t0", "ttft", 0.5, float(i))
+        for i in (8, 9, 10):
+            mon.observe("t0", "ttft", 2.0, float(i))
+        assert mon._alerting[("t0", "ttft_p90")] is True
+        assert mon.alerts.values[("t0", "ttft_p90")] == 1.0
+        alerts = [e for e in tr.events if e[3] == "slo_alert"]
+        assert len(alerts) == 1 and alerts[0][2] == "slo"
+        assert alerts[0][5]["burn_short"] >= 2.0
+        assert alerts[0][5]["burn_long"] >= 2.0
+        # compliant traffic ages the breaches out of both windows
+        for i in range(11, 31):
+            mon.observe("t0", "ttft", 0.5, float(i))
+        assert mon._alerting[("t0", "ttft_p90")] is False
+        assert len([e for e in tr.events if e[3] == "slo_resolve"]) == 1
+        # re-firing later is a new alert, counted again
+        for i in (31, 32, 33, 34):
+            mon.observe("t0", "ttft", 2.0, float(i))
+        assert mon.alerts.values[("t0", "ttft_p90")] == 2.0
+
+    def test_short_blip_filtered_by_long_window(self):
+        # a burst that saturates the short window cannot alert while the
+        # long window still holds enough compliant history
+        mon, _, tr = self._monitor()
+        for i in range(36):
+            mon.observe("t0", "ttft", 0.5, float(i))
+        for i in (36, 37, 38):
+            mon.observe("t0", "ttft", 2.0, float(i))
+        t = mon.status()["tenants"][0]
+        assert t["burn_short"] > 2.0 and t["burn_long"] < 2.0
+        assert not t["alerting"]
+        assert not [e for e in tr.events if e[3] == "slo_alert"]
+
+    def test_tenants_isolated_and_counters(self):
+        mon, reg, _ = self._monitor()
+        mon.observe("good", "ttft", 0.5, 0.0)
+        mon.observe("bad", "ttft", 5.0, 0.0)
+        assert mon.requests.values[("good", "ttft_p90", "ok")] == 1.0
+        assert mon.requests.values[("bad", "ttft_p90", "breach")] == 1.0
+        tenants = {t["tenant"]: t for t in mon.status()["tenants"]}
+        assert tenants["good"]["burn_short"] == 0.0
+        assert tenants["bad"]["burn_short"] == pytest.approx(10.0)
+        text = reg.exposition()
+        assert 'continuum_slo_burn_rate{tenant="bad",slo="ttft_p90",' \
+            'window="short"} 10' in text
+        assert 'continuum_slo_requests_total{tenant="good",' \
+            'slo="ttft_p90",status="ok"} 1' in text
+
+    def test_unmatched_metric_ignored(self):
+        mon, _, _ = self._monitor()
+        mon.observe("t0", "jct", 1e9, 0.0)   # no jct objective configured
+        assert mon.status()["tenants"] == []
+
+
+class TestEngineIntegration:
+    def test_ttft_jct_flow_and_alerts(self):
+        tel = Telemetry()
+        # impossible targets: every observation breaches, both windows
+        # saturate immediately, alerts must fire per tenant
+        tel.enable_slo(default_objectives(ttft_target_s=1e-6,
+                                          jct_target_s=1e-6))
+        run_engine(seeded_programs(0, n=4, twins=False), ReplayConfig(),
+                   physical=False, telemetry=tel)
+        status = tel.slo.status()
+        assert status["tenants"]
+        assert any(t["alerting"] for t in status["tenants"])
+        n_obs = sum(v for v in tel.slo.requests.values.values())
+        assert n_obs > 0
+        text = tel.metrics.exposition()
+        assert "continuum_slo_alerts_total" in text
+        assert "continuum_slo_burn_rate" in text
+        assert [e for e in tel.trace.events if e[3] == "slo_alert"]
+
+    def test_deterministic_across_same_seed_runs(self):
+        blobs = []
+        for _ in range(2):
+            tel = Telemetry()
+            tel.enable_slo(default_objectives(ttft_target_s=0.5))
+            run_engine(seeded_programs(1, n=3, twins=False),
+                       ReplayConfig(), physical=False, telemetry=tel)
+            blobs.append(tel.metrics.exposition())
+        assert blobs[0] == blobs[1]
