@@ -1,0 +1,130 @@
+"""Elastic fleet vs static provisioning under diurnal + bursty load.
+
+A static fleet has to pick one size: provision for the peak and the
+trough burns idle replica-hours; provision for the trough and the peak
+melts.  This bench runs the same seeded diurnal+bursty workload
+(``generate_diurnal_programs``: sinusoidal arrival rate with burst
+cohorts riding on top) through three fleets:
+
+    auto        starts at a single decode replica; a hysteretic
+                ``ScalingPolicy`` grows/drains the fleet at runtime
+                from queue-ETA + block-pool pressure, adding (and
+                later draining) one prefill-only replica plus up to
+                3 decode replicas
+    static3     3 decode replicas, fixed for the whole run
+    static2     2 decode replicas, fixed for the whole run
+
+All fleets use the ``kv_aware_migrate`` router so the only variable is
+provisioning.  Emits ``experiments/bench/elastic.csv`` with mean/p90
+JCT, queueing delay and replica-hours (``Cluster.replica_seconds``).
+The acceptance bar for the subsystem: the autoscaled fleet beats
+static3 on replica-hours at equal-or-better mean JCT, and beats
+static2 on mean JCT.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import RESULTS_DIR, emit, save_rows  # noqa: F401
+from repro.configs import get_config
+from repro.serving.cluster import ClusterConfig, ScalingConfig, build_cluster
+from repro.serving.engine import EngineConfig
+from repro.serving.offload import OffloadConfig
+from repro.serving.prefix import PrefixConfig
+from repro.serving.profiler import HardwareProfile
+from repro.sim.workload import WORKLOADS, generate_diurnal_programs
+
+FLEETS = ("auto", "static3", "static2")
+
+
+def elastic_workload(*, workload="swe-bench", n=36, rate=0.003, seed=0,
+                     period_s=1200.0, peak_mult=12.0):
+    """One diurnal period: sparse trough at both ends, bursty peak in
+    the middle — the shape where a fixed fleet size must be wrong at
+    least half the time.  The trough rate keeps a single replica under
+    ~50% busy; the 12x peak (plus burst cohorts) needs 3-4."""
+    spec = WORKLOADS[workload]
+    return generate_diurnal_programs(
+        spec, n=n, rate_jps=rate, seed=seed, period_s=period_s,
+        peak_mult=peak_mult, burst_frac=0.3, burst_size=3,
+        burst_span_s=1.0, tenants=4, tenant_skew=1.6, share_ratio=0.2,
+        storm_frac=0.3, storm_gap_s=20.0, churn_frac=0.3)
+
+
+def run_fleet(fleet: str, programs, *, arch="glm4-9b", chips=4,
+              kv_budget=8e9, max_batch=12, chunk_size=2048,
+              dram=60e9, ssd=120e9, peer_bw=50e9) -> dict:
+    arch_cfg = get_config(arch)
+    ecfg = EngineConfig(
+        policy="continuum", chips=chips, kv_budget_bytes=kv_budget,
+        max_batch=max_batch, chunk_size=chunk_size,
+        offload=OffloadConfig(dram_bytes=dram, ssd_bytes=ssd),
+        prefix=PrefixConfig())
+    if fleet == "auto":
+        ccfg = ClusterConfig(
+            n_replicas=1, router="kv_aware_migrate", peer_bw=peer_bw,
+            peer_latency_s=0.001, migrate_min_gain_s=0.5,
+            scaling=ScalingConfig(min_replicas=1, max_replicas=3,
+                                  scale_up_eta_s=20.0, scale_down_eta_s=3.0,
+                                  pool_pressure=0.9, up_hold_s=5.0,
+                                  down_hold_s=25.0, cooldown_s=15.0,
+                                  prefill_max=1))
+    else:
+        ccfg = ClusterConfig(
+            n_replicas=int(fleet[-1]), router="kv_aware_migrate",
+            peer_bw=peer_bw, peer_latency_s=0.001, migrate_min_gain_s=0.5)
+    cluster = build_cluster(arch_cfg, ecfg, ccfg, HardwareProfile())
+    t0 = time.time()
+    s = cluster.run(programs, max_seconds=1e7)
+    wall = time.time() - t0
+    end = cluster.clock.now
+    cluster.check(end)                   # conservation holds at the end
+    return {"fleet": fleet, "n": len(programs),
+            "avg_jct": s.avg_jct, "p50": s.p50_jct, "p90": s.p90_jct,
+            "queueing": s.avg_queueing, "ttft": s.avg_ttft,
+            "makespan_s": end,
+            "replica_hours": cluster.replica_seconds(end) / 3600.0,
+            "scale_ups": cluster.stats.scale_ups,
+            "scale_downs": cluster.stats.scale_downs,
+            "retired": cluster.stats.retired,
+            "prefill_handoffs": cluster.stats.prefill_handoffs,
+            "migrations": cluster.stats.migrations,
+            "cold_rehomes": cluster.stats.cold_rehomes,
+            "drained_tokens": cluster.stats.drained_tokens,
+            "wall_s": wall}
+
+
+def run(quick: bool = True) -> list[dict]:
+    n = 40 if quick else 96
+    seeds = (0,) if quick else (0, 1, 2)
+    rows = []
+    for seed in seeds:
+        programs = elastic_workload(n=n, seed=seed)
+        for fleet in FLEETS:
+            row = run_fleet(fleet, programs)
+            row["seed"] = seed
+            rows.append(row)
+            emit(f"elastic.{fleet}.avg_jct_s.seed{seed}", row["avg_jct"],
+                 f"rh={row['replica_hours']:.3f},"
+                 f"ups={row['scale_ups']},downs={row['scale_downs']}")
+    save_rows("elastic", rows)
+    base = {r["fleet"]: r for r in rows if r["seed"] == seeds[0]}
+    auto, s3, s2 = base["auto"], base["static3"], base["static2"]
+    emit("elastic.auto_vs_static3.replica_hour_savings",
+         1.0 - auto["replica_hours"] / max(s3["replica_hours"], 1e-9))
+    emit("elastic.auto_vs_static3.jct_ratio",
+         auto["avg_jct"] / max(s3["avg_jct"], 1e-9))
+    emit("elastic.auto_vs_static2.jct_speedup",
+         s2["avg_jct"] / max(auto["avg_jct"], 1e-9))
+    ok = (auto["replica_hours"] < s3["replica_hours"]
+          and auto["avg_jct"] <= s3["avg_jct"] * 1.001
+          and auto["avg_jct"] < s2["avg_jct"])
+    print(f"elastic acceptance bar: {'PASS' if ok else 'FAIL'} "
+          f"(auto jct={auto['avg_jct']:.2f}s rh={auto['replica_hours']:.3f} "
+          f"| static3 jct={s3['avg_jct']:.2f}s rh={s3['replica_hours']:.3f} "
+          f"| static2 jct={s2['avg_jct']:.2f}s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,11 +10,12 @@ import time
 def main() -> None:
     quick = "--full" not in sys.argv
     from benchmarks import (bench_ablation, bench_cluster, bench_decode,
-                            bench_distributed, bench_e2e, bench_kvstore,
-                            bench_memoryfulness, bench_offload,
-                            bench_overhead, bench_prefix_sharing,
-                            bench_roofline, bench_rollout,
-                            bench_sensitivity, bench_tail, bench_turns)
+                            bench_distributed, bench_e2e, bench_elastic,
+                            bench_kvstore, bench_memoryfulness,
+                            bench_offload, bench_overhead,
+                            bench_prefix_sharing, bench_roofline,
+                            bench_rollout, bench_sensitivity, bench_tail,
+                            bench_turns)
     benches = [
         ("fig8_e2e", bench_e2e.run),
         ("decode", bench_decode.run),
@@ -22,6 +23,7 @@ def main() -> None:
         ("fig10_offload", bench_offload.run),
         ("kvstore", bench_kvstore.run),
         ("cluster", bench_cluster.run),
+        ("elastic", bench_elastic.run),
         ("fig11_tail", bench_tail.run),
         ("fig12_distributed", bench_distributed.run),
         ("fig13_sensitivity", bench_sensitivity.run),

@@ -285,6 +285,13 @@ class Scheduler:
                                                  self.attained_service)
         return min(self.waiting, key=key)
 
+    def queue_backlog(self) -> list[tuple[Request, int]]:
+        """``(request, uncovered prefill tokens)`` for every waiting
+        request — the pin-aware residual that ``Engine.queue_eta`` prices
+        per request (on top of the covered context)."""
+        return [(r, max(r.prompt_len - self._pin_tokens(r), 0))
+                for r in self.waiting]
+
     # ------------------------------------------------- cached-prefix sources
     def _pin_tokens(self, req: Request) -> int:
         e = self.pinned.get(req.program_id)

@@ -176,7 +176,15 @@ class TTLModel:
         engine's outstanding-work ETA) — replaces the fleet-average T̄ when
         provided: in a multi-replica cluster the out-of-order cost a TTL
         miss pays is the *local* queue the returning program would rejoin,
-        not the historical average across the fleet."""
+        not the historical average across the fleet.
+
+        The estimate prices each queued request's residual prefill
+        separately (lumping them into one quadratic-attention call
+        overestimates replicas holding many small residuals, biasing this
+        solver toward over-pinning) and includes the waiting queue's
+        decode backlog. The same signal drives the cluster's
+        ``ScalingPolicy``, so TTL solving and fleet sizing read one
+        consistent notion of queueing pressure."""
         delay = self.t_bar.mean if queue_eta is None else max(0.0, queue_eta)
         return delay * self.eta_est.eta + max(0.0, prefill_reload)
 

@@ -1,12 +1,14 @@
 """Multi-replica cluster serving: KV-aware routing + cross-replica KV
-migration over the TransferEngine's peer channels."""
+migration over the TransferEngine's peer channels, with runtime
+autoscaling (drain-then-retire) and disaggregated prefill replicas."""
 from repro.serving.cluster.clock import ClusterClock
 from repro.serving.cluster.cluster import (Cluster, ClusterConfig,
                                            ClusterSimulator, ClusterStats,
                                            build_cluster)
 from repro.serving.cluster.peer import Migration, PeerLink
 from repro.serving.cluster.router import ClusterRouter
+from repro.serving.cluster.scaling import ScalingConfig, ScalingPolicy
 
 __all__ = ["Cluster", "ClusterClock", "ClusterConfig", "ClusterRouter",
            "ClusterSimulator", "ClusterStats", "Migration", "PeerLink",
-           "build_cluster"]
+           "ScalingConfig", "ScalingPolicy", "build_cluster"]

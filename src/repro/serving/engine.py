@@ -111,6 +111,10 @@ class Engine:
         self.ecfg = ecfg
         self.hw = hw
         self.engine_id = engine_id
+        # fleet role: "decode" serves full programs; "prefill" replicas
+        # (disaggregated fleet) only run first-turn/cold prefills and hand
+        # the finished KV to a decode replica before the tool returns
+        self.role = "decode"
         if cost is not None:            # pre-calibrated, shared across replicas
             self.cost = cost
             self.profile = cost.prof
@@ -282,27 +286,71 @@ class Engine:
     def queue_eta(self, now: float) -> float:
         """Routing/TTL signal: rough seconds until a *new* arrival would
         reach the head of this replica's queue — the outstanding prefill
-        of running + waiting requests plus the decode backlog of running
-        sequences, priced by the analytic cost model. Deterministic,
+        of running + waiting requests plus the decode backlog of BOTH,
+        priced by the analytic cost model. Each residual prefill is priced
+        per request at its own cached context: chunked prefill resumes
+        every residual from where it stopped, and the quadratic attention
+        term telescopes so per-chunk costs sum to one call at that
+        context. Lumping all residuals into a single ``prefill_seconds``
+        call (the old formula) charges the quadratic term on the fleet's
+        *total*, overestimating replicas that hold many small residuals —
+        which biased the TTL solver toward over-pinning and steered the
+        router away from mildly busy replicas. Deterministic,
         side-effect free; the cluster router folds it into placement and
         the TTL model uses it as the per-replica out-of-order delay
         (``TTLModel.solve(queue_eta=...)``)."""
-        pre = sum(r.prompt_len - r.prefill_pos for r in self.running
-                  if not r.done_prefill())
-        # waiting requests admit against their TTL pins: count only the
-        # uncovered suffix (a queue of pinned returners is nearly free,
-        # and overestimating it would trigger pointless migrations)
-        pre += sum(max(r.prompt_len - self.scheduler._pin_tokens(r), 0)
-                   for r in self.scheduler.waiting)
-        dec = sum(max(r.output_len - r.generated, 0) for r in self.running)
-        if pre <= 0 and dec <= 0:
+        pre_s = 0.0
+        dec = 0
+        ctxs = []
+        for r in self.running:
+            if not r.done_prefill():
+                pre_s += self.cost.prefill_seconds(
+                    r.prompt_len - r.prefill_pos, r.prefill_pos)
+            dec += max(r.output_len - r.generated, 0)
+            ctxs.append(r.prompt_len + r.generated)
+        # waiting requests admit against their TTL pins: price only the
+        # uncovered suffix on top of the covered context (a queue of
+        # pinned returners is nearly free, and overestimating it would
+        # trigger pointless migrations) — but their decode backlog queues
+        # behind the running batch all the same
+        for r, resid in self.scheduler.queue_backlog():
+            if resid > 0:
+                pre_s += self.cost.prefill_seconds(
+                    resid, r.prompt_len - resid)
+            dec += max(r.output_len - r.generated, 0)
+            ctxs.append(r.prompt_len + r.generated)
+        if pre_s <= 0 and dec <= 0:
             return 0.0
-        batch = min(max(len(self.running), 1), self.ecfg.max_batch)
-        ctxs = [r.prompt_len + r.generated for r in self.running]
+        batch = min(max(len(ctxs), 1), self.ecfg.max_batch)
         avg_ctx = int(sum(ctxs) / len(ctxs)) if ctxs else 0
         steps = dec / batch
-        return (self.cost.prefill_seconds(pre, 0)
-                + steps * self.cost.decode_step_seconds(batch, avg_ctx))
+        return pre_s + steps * self.cost.decode_step_seconds(batch, avg_ctx)
+
+    def est_step_seconds(self) -> float:
+        """Analytic duration of the replica's NEXT step (chunk-budget
+        capped prefill + current decode batch). The router uses this to
+        price reload-stall collateral: a reload stalls co-scheduled
+        requests only for the part that exceeds the step they were going
+        to run anyway."""
+        budget = self.ecfg.chunk_size
+        p_tok = 0
+        p_ctx = 0
+        n_dec = 0
+        d_ctx = 0
+        for r in self.running:
+            if not r.done_prefill():
+                if budget > 0:
+                    chunk = min(budget, r.prompt_len - r.prefill_pos)
+                    budget -= chunk
+                    p_tok += chunk
+                    p_ctx = max(p_ctx, r.prefill_pos)
+            elif not r.done():
+                n_dec += 1
+                d_ctx += r.prompt_len + r.generated
+        if p_tok == 0 and n_dec == 0:
+            return 0.0
+        d_avg = int(d_ctx / n_dec) if n_dec else 0
+        return self.cost.step_seconds(p_tok, p_ctx, n_dec, d_avg)
 
     # ----------------------------------------------------------------- step
     def step(self, now: float) -> StepEvents:
@@ -335,7 +383,6 @@ class Engine:
         # 2. compose the batch: chunked prefill + decode
         budget = self.ecfg.chunk_size
         prefill_work: list[PrefillWork] = []
-        reload_penalty = 0.0
         for r in self.running:
             if budget <= 0:
                 break
@@ -343,9 +390,6 @@ class Engine:
                 chunk = min(budget, r.prompt_len - r.prefill_pos)
                 prefill_work.append(PrefillWork(r, chunk, r.prefill_pos))
                 budget -= chunk
-                if r.reload_seconds > 0:
-                    reload_penalty = max(reload_penalty, r.reload_seconds)
-                    r.reload_seconds = 0.0
 
         decode_reqs = [r for r in self.running
                        if r.done_prefill() and not r.done()]
@@ -372,6 +416,19 @@ class Engine:
                     # request and re-create the entry the backend dropped
                     prefill_work = [w for w in prefill_work
                                     if w.req is not victim]
+
+        # Reload stalls gate the whole step — every co-scheduled request
+        # pays the slowest participant's reload (the router prices this
+        # collateral). Charged on the FIRST step the request participates
+        # in, prefill chunk or decode alike: a fully-cached admission (pin
+        # adoption after a DRAM restore) goes straight to decode and must
+        # still pay its stall. Cleared unconditionally so a stale value
+        # never survives to be re-charged on a later turn.
+        reload_penalty = 0.0
+        for r in [w.req for w in prefill_work] + decode_reqs:
+            if r.reload_seconds > 0:
+                reload_penalty = max(reload_penalty, r.reload_seconds)
+                r.reload_seconds = 0.0
 
         # 4. execute. Tier reloads are DMA transfers on their own channels,
         # so they overlap the step's compute; only the slower of the two

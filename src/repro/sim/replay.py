@@ -463,15 +463,47 @@ def cluster_programs(seed: int, n: int = 10,
         storm_gap_s=2.0, churn_frac=0.3, churn_scale=6.0)
 
 
+def elastic_programs(seed: int, n: int = 16,
+                     rate_jps: float = 2.0) -> list[Program]:
+    """Seeded diurnal + bursty smoke workload for elastic replays: the
+    arrival wave forces the scaling policy through at least one
+    trough-peak-trough cycle, bursts test the hysteresis, and the
+    skewed content (tenants/storms/churn) keeps migration live during
+    drains."""
+    from repro.sim.workload import generate_diurnal_programs
+    return generate_diurnal_programs(
+        SMOKE_SPEC, n=n, rate_jps=rate_jps, seed=seed,
+        period_s=40.0, peak_mult=5.0, burst_frac=0.25, burst_size=3,
+        burst_span_s=0.5, tenants=3, tenant_skew=1.4, share_ratio=0.3,
+        storm_frac=0.3, storm_gap_s=2.0, churn_frac=0.2, churn_scale=4.0)
+
+
+def elastic_scaling_config():
+    """The seeded elastic-replay policy: thresholds sized to the smoke
+    hardware (CPU-slow chip, seconds-long steps), one-replica floor,
+    short holds so the diurnal cycle triggers both directions."""
+    from repro.serving.cluster import ScalingConfig
+    return ScalingConfig(min_replicas=1, max_replicas=5,
+                         scale_up_eta_s=2.0, scale_down_eta_s=0.3,
+                         pool_pressure=0.9, up_hold_s=0.5,
+                         down_hold_s=3.0, cooldown_s=3.0)
+
+
 def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
                       replicas: int = 3,
                       router: str = "kv_aware_migrate",
-                      telemetry: bool = False
+                      telemetry: bool = False,
+                      scaling=None, prefill_replicas: int = 0
                       ) -> tuple[list[str], list[str], object]:
     """One cluster replay leg on the logical stack. Returns (trace lines,
     conservation violations observed at step boundaries, cluster). With
     ``telemetry``, a shared :class:`~repro.obs.Telemetry` plane is
-    attached to every replica and left on ``cluster.obs``."""
+    attached to every replica and left on ``cluster.obs``. With
+    ``scaling`` (a :class:`ScalingConfig`), the fleet is elastic:
+    ``replicas`` is the *starting* decode-pool size, an engine factory is
+    installed so the policy can grow it, and scale/drain/retire events
+    enter the byte-compared trace stream. ``prefill_replicas`` adds
+    disaggregated prefill-only replicas (``pf*``)."""
     from repro.serving.cluster import Cluster, ClusterConfig
     cfg = get_config(rc.arch, smoke=True)
     prof = build_profile(cfg, 1)
@@ -480,11 +512,23 @@ def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
     block_bytes = rc.block_size * prof.kv_bytes_per_token
     engines = [Engine(cfg, rc.engine_config(block_bytes), hw, cost=cost,
                       engine_id=f"r{i}") for i in range(replicas)]
+    for i in range(prefill_replicas):
+        e = Engine(cfg, rc.engine_config(block_bytes), hw, cost=cost,
+                   engine_id=f"pf{i}")
+        e.role = "prefill"
+        engines.append(e)
     ccfg = ClusterConfig(
         n_replicas=replicas, router=router,
         peer_bw=2 * rc.h2d_bw_blocks * block_bytes,
-        peer_latency_s=0.001)
-    cluster = Cluster(engines, ccfg)
+        peer_latency_s=0.001,
+        scaling=scaling, prefill_replicas=prefill_replicas)
+
+    def factory(eid: str) -> Engine:
+        return Engine(cfg, rc.engine_config(block_bytes), hw, cost=cost,
+                      engine_id=eid)
+
+    cluster = Cluster(engines, ccfg,
+                      engine_factory=factory if scaling else None)
     if telemetry:
         from repro.obs import Telemetry
         cluster.attach_telemetry(Telemetry())
@@ -507,14 +551,23 @@ def run_cluster_replay(programs: list[Program],
                        rc: ReplayConfig = ReplayConfig(),
                        replicas: int = 3,
                        router: str = "kv_aware_migrate",
-                       first: Optional[tuple] = None) -> ClusterReplayReport:
+                       first: Optional[tuple] = None,
+                       scaling=None,
+                       prefill_replicas: int = 0) -> ClusterReplayReport:
     """Run the trace twice; verdict = byte-identical traces + zero
     conservation violations. ``first`` reuses an existing
     ``run_cluster_trace`` result as run A (the CLI records the trace
-    artifact with it — no third simulation)."""
+    artifact with it — no third simulation). ``scaling`` /
+    ``prefill_replicas`` make both legs elastic (the scale/drain/retire
+    events are part of the byte-compared stream, so autoscaling itself
+    is gated deterministic)."""
     lines_a, viol_a, cluster = first if first is not None else \
-        run_cluster_trace(programs, rc, replicas, router)
-    lines_b, _, _ = run_cluster_trace(programs, rc, replicas, router)
+        run_cluster_trace(programs, rc, replicas, router,
+                          scaling=scaling,
+                          prefill_replicas=prefill_replicas)
+    lines_b, _, _ = run_cluster_trace(programs, rc, replicas, router,
+                                      scaling=scaling,
+                                      prefill_replicas=prefill_replicas)
     div = None
     for i, (a, b) in enumerate(zip(lines_a, lines_b)):
         if a != b:
@@ -525,7 +578,8 @@ def run_cluster_replay(programs: list[Program],
         div = {"line": i,
                "a": lines_a[i] if i < len(lines_a) else None,
                "b": lines_b[i] if i < len(lines_b) else None}
-    st = cluster.engines[0].scheduler.stats
+    fleet = cluster.all_engines()        # retired replicas still count
+    st = fleet[0].scheduler.stats
     return ClusterReplayReport(
         deterministic=div is None,
         conservation_violations=len(viol_a),
@@ -535,13 +589,18 @@ def run_cluster_replay(programs: list[Program],
         violation_examples=viol_a[:5],
         stats={"cold_rehomes": cluster.stats.cold_rehomes,
                "offload_reloads": sum(e.scheduler.stats.offload_reloads
-                                      for e in cluster.engines),
+                                      for e in fleet),
                "demotions": sum(e.scheduler.stats.demotions
-                                for e in cluster.engines),
+                                for e in fleet),
                "preemptions": sum(e.scheduler.stats.preemptions
-                                  for e in cluster.engines),
+                                  for e in fleet),
                "migrated_tokens": cluster.stats.migrated_tokens,
                "migration_denied": cluster.stats.migration_denied,
+               "scale_ups": cluster.stats.scale_ups,
+               "scale_downs": cluster.stats.scale_downs,
+               "retired": cluster.stats.retired,
+               "drained_tokens": cluster.stats.drained_tokens,
+               "prefill_handoffs": cluster.stats.prefill_handoffs,
                "engine0_pins": st.pins})
 
 
@@ -701,6 +760,14 @@ def main(argv=None) -> int:
     ap.add_argument("--cluster", action="store_true",
                     help="cluster mode: N-replica determinism + KV "
                          "conservation gate (logical stack)")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="with --cluster: elastic mode — seeded diurnal+"
+                         "bursty trace, runtime scale-up/down with "
+                         "drain-based retirement and a prefill-only "
+                         "replica; gates byte-identical traces, zero "
+                         "conservation violations AND non-vacuous "
+                         "scaling (at least one scale-up and one "
+                         "retirement per seed)")
     ap.add_argument("--replicas", type=int, default=3)
     ap.add_argument("--router", type=str, default="kv_aware_migrate")
     ap.add_argument("--calibrate", action="store_true",
@@ -759,6 +826,31 @@ def main(argv=None) -> int:
             print(f"calibrate seed {seed}: mfu {hw.mfu:.3f}->"
                   f"{cal.mfu:.3f} decode_eff {hw.decode_eff:.3f}->"
                   f"{cal.decode_eff:.3f} -> {path}")
+            continue
+        if args.cluster and args.autoscale:
+            progs = elastic_programs(seed, n=max(args.programs, 16))
+            scaling = elastic_scaling_config()
+            first = run_cluster_trace(
+                progs, ReplayConfig(), replicas=2, router=args.router,
+                scaling=scaling, prefill_replicas=1)
+            (out / f"elastic_trace_seed{seed}.jsonl").write_text(
+                "\n".join(first[0]) + "\n")
+            report = run_cluster_replay(progs, ReplayConfig(),
+                                        replicas=2, router=args.router,
+                                        first=first, scaling=scaling,
+                                        prefill_replicas=1)
+            (out / f"elastic_verdict_seed{seed}.json").write_text(
+                json.dumps(report.to_json(), indent=2, default=str))
+            scaled = (report.stats["scale_ups"] >= 1
+                      and report.stats["retired"] >= 1)
+            print(f"elastic seed {seed}: {report.describe()} "
+                  f"(scale_ups={report.stats['scale_ups']}, "
+                  f"retired={report.stats['retired']}, "
+                  f"handoffs={report.stats['prefill_handoffs']})")
+            if not scaled:
+                print(f"elastic seed {seed}: FAIL — scaling never fired "
+                      f"(vacuous elastic gate)")
+            failed |= not (report.ok and scaled)
             continue
         if args.cluster:
             progs = cluster_programs(seed, n=max(args.programs, 10))

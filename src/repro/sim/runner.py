@@ -107,6 +107,11 @@ class Simulator:
                 self._push(end + req.tool_duration, prog, req.turn_idx + 1)
 
     # -------------------------------------------------------------- results
+    def _summary_engines(self) -> list[Engine]:
+        """Engines whose stats enter the summary — elastic clusters
+        override to include replicas that retired mid-run."""
+        return self.engines
+
     def summary(self) -> Summary:
         programs = []
         total_tokens = 0
@@ -114,7 +119,7 @@ class Simulator:
         prefix_hit_tokens = 0
         reload_tokens = 0
         recompute_tokens = 0
-        for e in self.engines:
+        for e in self._summary_engines():
             programs.extend(e.programs.values())
             total_tokens += e.tokens_prefilled + e.tokens_decoded
             prefill_tokens += e.tokens_prefilled

@@ -230,6 +230,67 @@ def generate_skewed_programs(spec: WorkloadSpec, n: int, rate_jps: float,
     return progs
 
 
+def generate_diurnal_programs(spec: WorkloadSpec, n: int, rate_jps: float,
+                              seed: int = 0, *, period_s: float = 600.0,
+                              peak_mult: float = 4.0,
+                              burst_frac: float = 0.0,
+                              burst_size: int = 4,
+                              burst_span_s: float = 1.0,
+                              **skew_kw) -> list[Program]:
+    """Diurnal + bursty arrival shape — the autoscaling stressor.
+
+    A static fleet sized for the peak over-provisions the trough and a
+    fleet sized for the trough melts at the peak; this generator builds
+    the workload where an elastic cluster earns its replica-hours:
+
+    - **diurnal wave**: arrivals follow a non-homogeneous Poisson process
+      with rate ``rate_jps * (1 + (peak_mult-1) * (1+sin)/2)`` over a
+      ``period_s`` cycle (trough at t=0, peak half a period later),
+      generated by thinning — candidates are drawn at the peak rate and
+      accepted with probability ``rate(t)/rate_max``, so the trace is
+      deterministic for a seed and the *shape* is exact, not binned;
+    - **arrival bursts**: ``burst_frac`` of the accepted arrivals become
+      cohort heads — ``burst_size-1`` extra programs land within
+      ``burst_span_s`` of them (a team kicking off CI, a cron fan-out).
+      Bursts ride on top of the wave, so peak-hour bursts are the
+      thundering-herd worst case the scaling hysteresis must absorb
+      without thrashing.
+
+    Program *content* (turns, tenants, tool storms, churn) comes from
+    :func:`generate_skewed_programs` with the same ``n`` and any
+    ``skew_kw`` passed through; only the arrival times are rewritten,
+    so diurnal traces stay comparable with the skewed smoke traces.
+    Deterministic for a given seed."""
+    progs = generate_skewed_programs(spec, n=n, rate_jps=rate_jps,
+                                     seed=seed, **skew_kw)
+    rng = np.random.default_rng(seed + 0xD1E5)
+    peak_mult = max(peak_mult, 1.0)
+    rate_max = rate_jps * peak_mult
+
+    def rate_at(t: float) -> float:
+        wave = 0.5 * (1.0 + math.sin(2.0 * math.pi * t / period_s
+                                     - math.pi / 2.0))
+        return rate_jps * (1.0 + (peak_mult - 1.0) * wave)
+
+    arrivals: list[float] = []
+    t = 0.0
+    while len(arrivals) < len(progs):
+        t += rng.exponential(1.0 / rate_max)        # thinning candidates
+        accept = rng.random() < rate_at(t) / rate_max
+        if not accept:
+            continue
+        arrivals.append(t)
+        if burst_frac > 0 and rng.random() < burst_frac:
+            extra = min(burst_size - 1, len(progs) - len(arrivals))
+            for _ in range(max(extra, 0)):
+                arrivals.append(t + rng.random() * burst_span_s)
+    arrivals.sort()
+    for p, at in zip(progs, arrivals):
+        p.arrival_time = at
+    progs.sort(key=lambda p: (p.arrival_time, p.program_id))
+    return progs
+
+
 def request_for_turn(p: Program, turn_idx: int, arrival: float) -> Request:
     t = p.turns[turn_idx]
     dur = t.tool_duration

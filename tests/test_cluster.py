@@ -51,7 +51,7 @@ class TestPeerChannels:
 
     def test_link_eta_matches_commit(self):
         c = make_cluster(2)
-        link = c.links[(0, 1)]
+        link = c.links[("r0", "r1")]
         eta = link.eta(5e8, now=1.0, staged_ready=2.0)
         m = link.send("p", 100, 5e8, now=1.0, staged_ready=2.0)
         assert m.arrive == pytest.approx(eta)
@@ -180,7 +180,7 @@ class TestClusterRouter:
         e0 = c.engines[0]
         e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
         req = Request("pH", 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
-        c.router.session_map["pH"] = 0
+        c.router.session_map["pH"] = "r0"
         e0.submit(req, 0.0)
         now = drain(e0)
         c.clock.advance(now)
@@ -198,7 +198,7 @@ class TestClusterRouter:
         e0 = c.engines[0]
         e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
         req = Request("pC", 0, 640, 4, 0.0, 0.0, tool="t", tool_duration=5.0)
-        c.router.session_map["pC"] = 0
+        c.router.session_map["pC"] = "r0"
         e0.submit(req, 0.0)
         now = drain(e0)
         c.clock.advance(now)
@@ -215,7 +215,7 @@ class TestClusterRouter:
                          migrate_min_gain_s=1e9)
         e0 = c.engines[0]
         e0.scheduler.policy = StaticTTLPolicy(ttl=1e9)
-        c.router.session_map["pM"] = 0
+        c.router.session_map["pM"] = "r0"
         e0.submit(Request("pM", 0, 640, 4, 0.0, 0.0, tool="t",
                           tool_duration=5.0), 0.0)
         now = drain(e0)
