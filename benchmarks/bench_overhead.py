@@ -28,6 +28,9 @@ def measure(policy: str, offload: bool, n_wait: int = 256,
     if telemetry and tel is None:
         from repro.obs import Telemetry
         tel = Telemetry()
+        # the gate prices the *full* plane: drift predict/realize pairs
+        # ride the same scheduler hot path as trace + audit
+        tel.enable_drift()
     times = []
     for it in range(iters):
         blocks = BlockManager(BlockConfig(100000, 16))
@@ -82,8 +85,9 @@ def run(quick: bool = True) -> list[dict]:
 def run_telemetry_gate(max_overhead: float = 0.03,
                        pairs: int = 80, http: bool = False) -> bool:
     """CI gate for the telemetry plane: the *enabled* Schedule() overhead
-    (trace instants + audit links + counters on every decision) must stay
-    under ``max_overhead`` of the uninstrumented call.
+    (trace instants + audit links + counters on every decision, plus the
+    drift watchdog's predict/realize pairs on every solve and admission)
+    must stay under ``max_overhead`` of the uninstrumented call.
 
     Estimator: ``pairs`` back-to-back off/on single-call timings; the
     statistic is the **median of per-pair on/off ratios**. Shared-host
@@ -109,6 +113,7 @@ def run_telemetry_gate(max_overhead: float = 0.03,
         from repro.obs import Telemetry
         from repro.obs.server import ObsServer
         tel = Telemetry()
+        tel.enable_drift()
         server = ObsServer(tel, clock=lambda: 0.0).start()
         url = server.url("/metrics")
 

@@ -441,12 +441,38 @@ class Scheduler:
         self._log("admit", req.program_id, req.turn_idx, source, cached)
         self.waiting.remove(req)
         req.state = RequestState.RUNNING
+        drift = self.obs.drift if self.obs is not None else None
+        if drift is not None and not drift._pending:
+            # nothing staged -> every realize/drop below is a no-op; skip
+            # them so policies that never solve (and the overhead gate's
+            # solve-free workload) pay one dict truthiness test, not
+            # three tuple-hash pops per admission
+            drift = None
+        if drift is not None:
+            # reload-ETA peek vs commit: the solve priced prefill_reload
+            # from a TransferEngine peek; an offload admission just
+            # committed the real thing. Any other source means the
+            # predicted reload never ran — no ground truth, drop it.
+            if source == "offload":
+                drift.realize("prefill_reload", req.program_id, now,
+                              req.reload_seconds)
+            else:
+                drift.drop("prefill_reload", req.program_id)
         if req.first_schedule_time < 0:
             req.first_schedule_time = now
             req.queueing_delay = now - req.arrival_time
             # feed T̄: queueing delay of requests whose KV was NOT retained
             if not req.served_from_pin and req.turn_idx > 0:
                 self.handler.ttl_model.observe_queueing_delay(req.queueing_delay)
+            if drift is not None:
+                if req.served_from_pin or req.turn_idx == 0:
+                    # a pin hit skipped the queue the estimate priced
+                    drift.drop("queue_eta", req.program_id)
+                else:
+                    drift.realize("queue_eta", req.program_id, now,
+                                  req.queueing_delay)
+                drift.realize("placement_cost", req.program_id, now,
+                              req.queueing_delay + req.reload_seconds)
         return True
 
     # --------------------------------------------------- shared-prefix hooks

@@ -136,11 +136,32 @@ class ToolCallHandler:
                     self.obs_replica, "tool_duration", timestamp, cat="ttl",
                     args={"program": program_id, "tool": pend.tool,
                           "duration": round(timestamp - pend.finish_ts, 9)})
+                if self.obs.drift is not None:
+                    # ground truth for the tool-CDF estimator staged at
+                    # set_up_ttl time (no-op if no solve ran)
+                    self.obs.drift.realize(
+                        "tool_duration", program_id, timestamp,
+                        timestamp - pend.finish_ts)
         self.seen_programs.add(program_id)
 
     def set_up_ttl(self, req: Request, tool: str) -> TTLDecision:
         reload = self.prefill_reload_fn(req)
         queue_eta = self.queue_eta_fn() if self.queue_eta_fn else None
+        if self.obs is not None and self.obs.drift is not None:
+            # stage every solver input the drift watchdog can later test:
+            # the queueing delay the model priced (realized at the next
+            # non-pin admission), the reload-ETA peek (realized when the
+            # reload commits) and the tool-duration expectation (realized
+            # when the program returns)
+            drift = self.obs.drift
+            pid = req.program_id
+            ts = req.finish_time if req.finish_time >= 0 else 0.0
+            drift.predict("queue_eta", pid, ts,
+                          queue_eta if queue_eta is not None
+                          else self.ttl_model.t_bar.mean)
+            drift.predict("prefill_reload", pid, ts, reload)
+            drift.predict("tool_duration", pid, ts,
+                          self.ttl_model.predict_tool_duration(tool))
         if req.parallel_tools and \
                 self.ttl_model.records.count(tool) <= self.ttl_model.cfg.cold_start_k:
             # joint barrier CDF not yet warm: independence product of the

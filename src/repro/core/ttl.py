@@ -167,6 +167,20 @@ class TTLModel:
     def observe_program_finish(self, num_turns: int) -> None:
         self.eta_est.observe_program(num_turns)
 
+    def predict_tool_duration(self, tool: Optional[str]) -> float:
+        """Point prediction of the coming tool call's duration — the
+        expectation of the same empirical records the solver's CDF draws
+        from (per-tool mean when the tool has records, else the global
+        mean, else the cold-start Exp mean). The drift watchdog pairs
+        this with the realized gap to audit the tool-CDF estimator."""
+        d = self.records.durations(tool) if tool else \
+            self.records.durations(None)
+        if d.size == 0:
+            d = self.records.durations(None)
+        if d.size == 0:
+            return self.cfg.exp_unit_mean
+        return float(d.mean())
+
     # ---- the solver ------------------------------------------------------
     def _gain_term(self, prefill_reload: float,
                    queue_eta: Optional[float] = None) -> float:

@@ -120,6 +120,15 @@ class Telemetry:
             "continuum_transfer_inflight_bytes",
             "Approximate bytes still in flight (backlog x nominal bw)",
             ("replica", "channel"))
+        self.jct_components = m.gauge(
+            "continuum_jct_component_seconds",
+            "Fleet JCT decomposition by causal component (refreshed by "
+            "each attribution analysis — see obs.attribution)",
+            ("replica", "component"))
+        # prediction-drift watchdog (enable_drift); None = drift off and
+        # every paired emission site costs one extra attribute test
+        self.drift = None
+        self._engines: list = []       # attached engines (drift refits)
 
     # ------------------------------------------------------------ wiring
     def attach_engine(self, engine) -> None:
@@ -146,6 +155,9 @@ class Telemetry:
             runtime.obs = self
             runtime.obs_replica = r
             runtime.obs_clock = lambda: engine.clock
+        self._engines.append(engine)
+        if self.drift is not None:
+            self._wire_drift_engine(engine)
         self.metrics.on_collect(lambda: self.collect_engine(engine))
 
     def _attach_channels(self, te, replica: str) -> None:
@@ -236,6 +248,49 @@ class Telemetry:
                                      "source": rec.source,
                                      "record": rec.id})
 
+    # ----------------------------------------------------- drift watchdog
+    def enable_drift(self, cfg=None):
+        """Attach the prediction-drift watchdog: every predicted-vs-
+        realized pair (TTL-solve inputs, reload peeks, step estimates,
+        placement scores, migration ETAs) feeds a rolling window with
+        burn-style alerting (``drift_alert`` trace instants +
+        ``continuum_drift_*`` metrics). Already-attached engines get
+        their ``step_seconds`` recalibrator wired immediately."""
+        from repro.obs.drift import DriftConfig, DriftMonitor
+        self.drift = DriftMonitor(self.metrics, self.trace,
+                                  cfg or DriftConfig())
+        for engine in self._engines:
+            self._wire_drift_engine(engine)
+        return self.drift
+
+    def _wire_drift_engine(self, engine) -> None:
+        """A drift alert on the step estimator re-fits the hardware
+        calibration (profiler.calibrate_hardware) from the engine's live
+        step samples; the fitted profile is reported, never applied —
+        telemetry must not change scheduling decisions."""
+        from repro.serving.profiler import calibrate_hardware
+        eng = engine
+
+        def _refit() -> dict:
+            samples = getattr(eng, "drift_samples", None)
+            if not samples:
+                return {"skipped": "no live step samples"}
+            hw = calibrate_hardware(samples, eng.cost.prof, eng.cost.hw)
+            return {"mfu": round(hw.mfu, 6),
+                    "decode_eff": round(hw.decode_eff, 6),
+                    "samples": len(samples)}
+
+        self.drift.add_recalibrator(
+            "step_seconds", f"calibrate_hardware/{eng.engine_id}", _refit)
+
+    def attribution(self, eps: float = 1e-6) -> dict:
+        """Run critical-path JCT attribution over the live trace and
+        refresh ``continuum_jct_component_seconds``. Post-hoc analysis
+        (O(events)) — the ``/attribution`` endpoint and the replay demo
+        call it; nothing on the step path does."""
+        from repro.obs import attribution as _attr
+        return _attr.attribute(self, eps=eps)
+
     # --------------------------------------------------------- SLO / latency
     def enable_slo(self, objectives):
         """Attach a per-tenant burn-rate monitor; its counters/gauges
@@ -304,10 +359,11 @@ class Telemetry:
 
     def cluster_migration(self, program_id: str, src: str, dst: str,
                           now: float, arrive: float, tokens: int,
-                          nbytes: float) -> None:
+                          nbytes: float, reason: str = "rehome") -> None:
         self.trace.instant("cluster", "migrate", now, cat="cluster",
                            args={"program": program_id, "src": src,
                                  "dst": dst, "tokens": tokens,
-                                 "arrive": round(arrive, 9)})
+                                 "arrive": round(arrive, 9),
+                                 "reason": reason})
         self.migrations.inc(1.0, (src, dst))
         self.migrated_bytes.inc(nbytes, (src, dst))

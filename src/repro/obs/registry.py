@@ -103,6 +103,15 @@ class Counter(_Metric):
 class Gauge(Counter):
     kind = "gauge"
 
+    def __init__(self, name: str, help: str, labelnames: tuple = (),
+                 summable: bool = True):
+        super().__init__(name, help, labelnames)
+        # quantiles, ratios and other order statistics cannot be summed
+        # across replicas: summable=False keeps them out of any
+        # label-dropping aggregation (fleet view) instead of exposing a
+        # silently-wrong sum
+        self.summable = summable
+
     def set(self, value: float, labels: tuple = ()) -> None:
         self.values[labels] = float(value)
 
@@ -190,8 +199,9 @@ class MetricsRegistry:
     def counter(self, name: str, help: str, labelnames: tuple = ()) -> Counter:
         return self._get(Counter, name, help, labelnames)
 
-    def gauge(self, name: str, help: str, labelnames: tuple = ()) -> Gauge:
-        return self._get(Gauge, name, help, labelnames)
+    def gauge(self, name: str, help: str, labelnames: tuple = (),
+              summable: bool = True) -> Gauge:
+        return self._get(Gauge, name, help, labelnames, summable=summable)
 
     def histogram(self, name: str, help: str, labelnames: tuple = (),
                   buckets: Optional[Iterable[float]] = None) -> Histogram:
@@ -302,8 +312,12 @@ def aggregate(registry: MetricsRegistry,
     """Fleet view: a new registry with ``drop_label`` removed from every
     metric and same-key children summed across it (counters and histogram
     buckets add; gauges report fleet totals — occupancy-style gauges sum
-    meaningfully, ETAs read as aggregate backlog). Deterministic: child
-    ordering is re-derived from the merged keys at exposition time."""
+    meaningfully, ETAs read as aggregate backlog). Gauges declared
+    ``summable=False`` (quantiles, error percentiles) that carry the
+    dropped label are *omitted entirely* — a fleet view must never
+    expose a silently-wrong summed quantile; scrape the per-replica
+    view for those. Deterministic: child ordering is re-derived from
+    the merged keys at exposition time."""
     registry.collect()
     out = MetricsRegistry()
     for name, m in registry.metrics.items():
@@ -324,9 +338,15 @@ def aggregate(registry: MetricsRegistry,
                     for i, c in enumerate(counts):
                         cur[i] += c
                     h.sums[k] += m.sums[key]
+        elif isinstance(m, Gauge):
+            if not m.summable and idx is not None:
+                continue          # explicitly absent from the fleet view
+            agg = out.gauge(name, m.help, names, summable=m.summable)
+            for key, v in m.values.items():
+                k = _drop_key(key, idx)
+                agg.values[k] = agg.values.get(k, 0.0) + v
         else:
-            agg = out.gauge(name, m.help, names) if isinstance(m, Gauge) \
-                else out.counter(name, m.help, names)
+            agg = out.counter(name, m.help, names)
             for key, v in m.values.items():
                 k = _drop_key(key, idx)
                 agg.values[k] = agg.values.get(k, 0.0) + v

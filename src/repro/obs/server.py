@@ -13,8 +13,15 @@ and on a laptop:
 - ``GET /audit``             audit summary; ``/audit/<program_id>`` the
   program's causal solve→action chain (JSON)
 - ``GET /events``            SSE stream of live trace events
-  (``?limit=N`` closes after N events, ``?from=SEQ`` resumes a cursor)
+  (``?limit=N`` closes after N events, ``?from=SEQ`` resumes a cursor;
+  events compacted out of the ring since the cursor are announced with
+  a well-formed ``event: gap`` frame, never silently skipped)
 - ``GET /slo``               burn-rate status when an SLOMonitor is on
+- ``GET /attribution``       critical-path JCT decomposition of every
+  completed program + fleet bottleneck rollup (JSON);
+  ``/attribution/<program_id>`` one program's span breakdown
+- ``GET /drift``             prediction-drift watchdog status (per-
+  estimator bias/p50/p90, live alerts) when enabled
 
 The simulation mutates the plane from its own thread while handlers
 read; reads that race a dict mutation are retried (`RuntimeError` from
@@ -105,6 +112,10 @@ class ObsServer:
                 self._events(h, q)
             elif path == "/slo":
                 self._slo(h)
+            elif path == "/attribution" or path.startswith("/attribution/"):
+                self._attribution(h, path)
+            elif path == "/drift":
+                self._drift(h)
             else:
                 self._send(h, 404, b"not found\n", "text/plain")
         except (BrokenPipeError, ConnectionResetError):
@@ -193,6 +204,25 @@ class ObsServer:
             return
         self._json(h, self._read(self.tel.slo.status))
 
+    def _attribution(self, h, path: str) -> None:
+        report = self._read(lambda: self.tel.attribution())
+        if path == "/attribution":
+            self._json(h, report)
+            return
+        pid = path[len("/attribution/"):]
+        prog = report["programs"].get(pid)
+        if prog is None:
+            self._json(h, {"error": f"no completed program {pid!r}"},
+                       code=404)
+            return
+        self._json(h, prog)
+
+    def _drift(self, h) -> None:
+        if self.tel.drift is None:
+            self._json(h, {"error": "drift watchdog not enabled"}, code=404)
+            return
+        self._json(h, self._read(self.tel.drift.status))
+
     def _events(self, h, q) -> None:
         limit = int(q.get("limit", ["0"])[0])
         poll = float(q.get("poll", [str(self.poll_s)])[0])
@@ -205,8 +235,16 @@ class ObsServer:
         h.end_headers()
         sent = 0
         while not self._stopping:
-            events, cursor = self._read(lambda: tr.tail(cursor))
-            base = cursor - len(events)
+            events, new_cursor = self._read(lambda: tr.tail(cursor))
+            base = new_cursor - len(events)
+            if base > cursor:
+                # the ring compacted past the cursor: announce exactly
+                # what was lost instead of silently skipping ahead
+                gap = json.dumps({"from": cursor + 1, "to": base,
+                                  "dropped": base - cursor},
+                                 separators=(",", ":"))
+                h.wfile.write(f"event: gap\ndata: {gap}\n\n".encode())
+            cursor = new_cursor
             for i, ev in enumerate(events):
                 payload = json.dumps(ev, separators=(",", ":"))
                 h.wfile.write(f"id: {base + i + 1}\n"

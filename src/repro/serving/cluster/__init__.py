@@ -4,11 +4,13 @@ autoscaling (drain-then-retire) and disaggregated prefill replicas."""
 from repro.serving.cluster.clock import ClusterClock
 from repro.serving.cluster.cluster import (Cluster, ClusterConfig,
                                            ClusterSimulator, ClusterStats,
-                                           build_cluster)
+                                           build_cluster,
+                                           prefill_engine_config)
 from repro.serving.cluster.peer import Migration, PeerLink
 from repro.serving.cluster.router import ClusterRouter
 from repro.serving.cluster.scaling import ScalingConfig, ScalingPolicy
 
 __all__ = ["Cluster", "ClusterClock", "ClusterConfig", "ClusterRouter",
            "ClusterSimulator", "ClusterStats", "Migration", "PeerLink",
-           "ScalingConfig", "ScalingPolicy", "build_cluster"]
+           "ScalingConfig", "ScalingPolicy", "build_cluster",
+           "prefill_engine_config"]

@@ -117,6 +117,10 @@ class Cluster:
 
         # ------------------------------------------------------- elasticity
         self.engine_factory = engine_factory
+        # optional role-specific factory: prefill replicas get their own
+        # EngineConfig (build_cluster installs it); falls back to the
+        # decode factory when absent
+        self.prefill_factory: Optional[Callable[[str], Engine]] = None
         self.scaling = ScalingPolicy(ccfg.scaling) if ccfg.scaling else None
         self.draining: dict[str, float] = {}       # engine_id -> drain start
         self.retired_engines: list[Engine] = []
@@ -244,7 +248,10 @@ class Cluster:
         prefix = "pf" if role == "prefill" else "r"
         eid = f"{prefix}{self._next_replica}"
         self._next_replica += 1
-        e = self.engine_factory(eid)
+        factory = self.prefill_factory \
+            if role == "prefill" and self.prefill_factory is not None \
+            else self.engine_factory
+        e = factory(eid)
         e.role = role
         self.engines.append(e)      # in-place: the simulator shares the list
         self._active_since[eid] = now
@@ -290,7 +297,8 @@ class Cluster:
                 dst = self._drain_target(pid, src, now)
                 before = self.stats.migrated_tokens
                 if dst is not None and \
-                        self.migrate(pid, eid, dst.engine_id, now):
+                        self.migrate(pid, eid, dst.engine_id, now,
+                                     reason="drain"):
                     self.stats.drained_tokens += \
                         self.stats.migrated_tokens - before
                     self.router.session_map[pid] = dst.engine_id
@@ -369,7 +377,8 @@ class Cluster:
             pid = r.program_id
             dst = self._drain_target(pid, e, end)
             if dst is not None and \
-                    self.migrate(pid, e.engine_id, dst.engine_id, end):
+                    self.migrate(pid, e.engine_id, dst.engine_id, end,
+                                 reason="handoff"):
                 self.stats.prefill_handoffs += 1
                 self.router.session_map[pid] = dst.engine_id
             else:
@@ -433,14 +442,23 @@ class Cluster:
                     kept.append(m)
             link.ledger = kept
 
-    def migrate(self, pid: str, src_ref, dst_ref, now: float) -> bool:
+    def migrate(self, pid: str, src_ref, dst_ref, now: float,
+                reason: str = "rehome") -> bool:
         """Commit a cross-replica KV migration. Returns False (and leaves
-        the source untouched) when the target cannot guarantee room."""
+        the source untouched) when the target cannot guarantee room.
+        ``reason`` classifies the flight for attribution: ``rehome``
+        (router placement win), ``drain`` (scale-down evacuation) or
+        ``handoff`` (prefill->decode disaggregation shipment)."""
         src = self._resolve(src_ref)
         dst = self._resolve(dst_ref)
         link = self.links.get((src.engine_id, dst.engine_id))
         if link is None or src.kvstore is None or dst.kvstore is None:
             return False
+        drift = self.obs.drift if self.obs is not None else None
+        # drift control pair: peek the ETA while the source still holds
+        # the entry (migrate_out/extract mutate that state below)
+        peek = self.migration_eta(pid, src.engine_id, dst.engine_id, now) \
+            if drift is not None else math.inf
         te = src.kvstore.transfer
         pin = src.scheduler.pinned.get(pid)
         if pin is not None:
@@ -493,10 +511,13 @@ class Cluster:
         self.trace.append({"ev": "migrate", "pid": pid,
                            "src": src.engine_id, "dst": dst.engine_id,
                            "t": round(now, 9), "arrive": round(m.arrive, 9),
-                           "tokens": tokens})
+                           "tokens": tokens, "reason": reason})
         if self.obs is not None:
             self.obs.cluster_migration(pid, src.engine_id, dst.engine_id,
-                                       now, m.arrive, tokens, nbytes)
+                                       now, m.arrive, tokens, nbytes,
+                                       reason=reason)
+            if drift is not None and math.isfinite(peek):
+                drift.observe("migration_eta", now, peek, m.arrive - now)
         return True
 
     def drop_replica_kv(self, pid: str, ref, now: float) -> int:
@@ -619,13 +640,32 @@ class ClusterSimulator(Simulator):
         return self.cluster.all_engines()
 
 
+def prefill_engine_config(ecfg: EngineConfig,
+                          chunk_scale: int = 4) -> EngineConfig:
+    """The prefill-pool variant of a decode EngineConfig: a much larger
+    per-step chunk budget (the pool exists to swallow long first-turn
+    prefills) and TTL pinning off — a prefill replica hands every
+    finished KV to a decode replica immediately, so retaining it across
+    a tool call would only fight the handoff for HBM. ``fcfs_program``
+    keeps the program-level FCFS ordering without retention."""
+    return dataclasses.replace(
+        ecfg, policy="fcfs_program",
+        chunk_size=max(1, ecfg.chunk_size * chunk_scale))
+
+
 def build_cluster(arch: ModelConfig, ecfg: EngineConfig,
                   ccfg: ClusterConfig = ClusterConfig(),
-                  hw: HardwareProfile = HardwareProfile()) -> Cluster:
+                  hw: HardwareProfile = HardwareProfile(),
+                  prefill_ecfg: Optional[EngineConfig] = None) -> Cluster:
     """``n_replicas`` decode replicas (+ ``prefill_replicas`` prefill-only
     ones) sharing one calibrated cost model (profiles are per-(model,
     hardware), not per-replica), with an ``engine_factory`` installed so
-    the scaling policy can grow the fleet at runtime."""
+    the scaling policy can grow the fleet at runtime. Prefill replicas
+    use ``prefill_ecfg`` (default :func:`prefill_engine_config`:
+    larger chunk budget, no TTL pins) — both the seed pool and any
+    replica the autoscaler adds later with ``role="prefill"``."""
+    pcfg = prefill_ecfg if prefill_ecfg is not None \
+        else prefill_engine_config(ecfg)
     engines: list[Engine] = []
     cost = None
     for i in range(ccfg.n_replicas):
@@ -633,7 +673,7 @@ def build_cluster(arch: ModelConfig, ecfg: EngineConfig,
         cost = cost if cost is not None else eng.cost
         engines.append(eng)
     for i in range(ccfg.prefill_replicas):
-        eng = Engine(arch, ecfg, hw, cost=cost, engine_id=f"pf{i}")
+        eng = Engine(arch, pcfg, hw, cost=cost, engine_id=f"pf{i}")
         eng.role = "prefill"
         cost = cost if cost is not None else eng.cost
         engines.append(eng)
@@ -642,4 +682,9 @@ def build_cluster(arch: ModelConfig, ecfg: EngineConfig,
     def factory(eid: str, _arch=arch, _ecfg=ecfg, _hw=hw) -> Engine:
         return Engine(_arch, _ecfg, _hw, cost=shared, engine_id=eid)
 
-    return Cluster(engines, ccfg, engine_factory=factory)
+    def pf_factory(eid: str, _arch=arch, _ecfg=pcfg, _hw=hw) -> Engine:
+        return Engine(_arch, _ecfg, _hw, cost=shared, engine_id=eid)
+
+    cluster = Cluster(engines, ccfg, engine_factory=factory)
+    cluster.prefill_factory = pf_factory
+    return cluster

@@ -165,7 +165,12 @@ class ClusterRouter:
                                  args={"replica": home.engine_id,
                                        "turn": req.turn_idx})
             return home
-        e, migrate = self._best_replica(req, home, now)
+        e, migrate, score = self._best_replica(req, home, now)
+        if obs is not None and obs.drift is not None and score is not None:
+            # the winner's cost is a time-to-first-compute estimate; the
+            # scheduler realizes it as queueing_delay + committed reload
+            # at this request's first admission on the chosen replica
+            obs.drift.predict("placement_cost", pid, now, score)
         if e is not home:
             shipped = migrate and self.cluster.migrate(
                 pid, home.engine_id, e.engine_id, now)
@@ -236,7 +241,8 @@ class ClusterRouter:
 
     def _best_replica(self, req: Request, home, now: float):
         """Score every placeable replica for this returning request;
-        returns (winner engine, ship-the-KV?)."""
+        returns (winner engine, ship-the-KV?, winner cost or None when
+        the decision was forced rather than scored)."""
         pid = req.program_id
         pin = home.scheduler.pinned.get(pid)
         entry = home.kvstore.entries.get(pid) \
@@ -245,7 +251,7 @@ class ClusterRouter:
             # the entry is an inbound migration still on the wire: moving
             # it again before it lands is pure thrash — stay home (the
             # drain pump will move it after landing if home is draining)
-            return home, False
+            return home, False, None
         kv_tokens = pin.tokens if pin is not None else \
             (entry.tokens if entry is not None else 0)
         nbytes = kv_tokens * home.scheduler._kv_bytes_per_token
@@ -258,13 +264,13 @@ class ClusterRouter:
                 # fully cold returner: its prefill belongs on the
                 # disaggregated pool (the handoff re-homes it after)
                 return min(pf, key=lambda e: (e.load(),
-                                              self._order(e))), False
+                                              self._order(e))), False, None
         candidates = self._pool()
         if not home_draining and home.role == "decode" \
                 and home not in candidates:
             candidates = candidates + [home]
         if not candidates:
-            return home, False
+            return home, False, None
 
         home_cost = None
         scored = []
@@ -302,5 +308,5 @@ class ClusterRouter:
                                    self._order(s[1])))
         if e is not home and home_cost is not None \
                 and home_cost - cost <= self.migrate_min_gain_s:
-            return home, False                       # hysteresis: stay put
-        return e, migrate
+            return home, False, home_cost            # hysteresis: stay put
+        return e, migrate, cost

@@ -43,8 +43,13 @@ from typing import Optional
 class ScalingConfig:
     min_replicas: int = 1
     max_replicas: int = 6
-    scale_up_eta_s: float = 1.0       # mean queue ETA above -> pressure up
-    scale_down_eta_s: float = 0.2     # mean queue ETA below -> pressure down
+    scale_up_eta_s: float = 1.0       # aggregate ETA above -> pressure up
+    scale_down_eta_s: float = 0.2     # aggregate ETA below -> pressure down
+    # how the per-replica queue ETAs collapse into the scaling signal:
+    # "mean" (historic default) washes out a single hot replica among
+    # idle peers; "p90" (nearest-rank) and "max" keep tail congestion
+    # visible so one overloaded replica can still trigger scale-up.
+    eta_aggregate: str = "mean"       # "mean" | "p90" | "max"
     pool_pressure: float = 0.9        # any block pool above -> pressure up
     up_hold_s: float = 0.5            # signal persistence before acting
     down_hold_s: float = 4.0
@@ -73,11 +78,21 @@ class ScalingPolicy:
 
     # ------------------------------------------------------------- signals
     def signals(self, cluster, now: float) -> tuple[float, float, int]:
-        """(mean decode-pool queue ETA, max pool occupancy, pool size)."""
+        """(aggregate decode-pool queue ETA, max pool occupancy, pool
+        size) — the ETA aggregate follows ``cfg.eta_aggregate``."""
         pool = cluster.decode_pool()
         if not pool:
             return 0.0, 0.0, 0
-        eta = sum(e.queue_eta(now) for e in pool) / len(pool)
+        etas = sorted(e.queue_eta(now) for e in pool)
+        agg = self.cfg.eta_aggregate
+        if agg == "max":
+            eta = etas[-1]
+        elif agg == "p90":
+            eta = etas[min(len(etas) - 1,
+                           max(0, -(-9 * len(etas) // 10) - 1))]
+        else:
+            assert agg == "mean", f"unknown eta_aggregate {agg!r}"
+            eta = sum(etas) / len(etas)
         press = max((e.blocks.used / e.blocks.total) if e.blocks.total
                     else 0.0 for e in pool)
         return eta, press, len(pool)

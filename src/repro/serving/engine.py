@@ -242,6 +242,9 @@ class Engine:
         # telemetry plane (attach_telemetry); None = every emission site
         # short-circuits on one attribute test
         self.obs = None
+        # live StepSamples kept only while the drift watchdog is on —
+        # its step_seconds recalibrator re-fits HardwareProfile from them
+        self.drift_samples: list = []
 
     def attach_telemetry(self, tel) -> None:
         """Wire this replica into a shared :class:`repro.obs.Telemetry`:
@@ -360,6 +363,12 @@ class Engine:
         self.scheduler.now = now    # timestamps decisions made mid-step
         for hook in self.pre_step_hooks:
             hook(self, now)
+        # drift watchdog: the router prices collateral off
+        # est_step_seconds(), an estimate of the CURRENT batch's next
+        # step — snapshot it before admission changes the batch so the
+        # realized pair below compares like with like
+        drift = self.obs.drift if self.obs is not None else None
+        est_step = self.est_step_seconds() if drift is not None else 0.0
         # 1. admission (Algorithm 1 Schedule())
         cap = self.ecfg.max_batch - len(self.running)
         if cap > 0:
@@ -433,19 +442,41 @@ class Engine:
         # 4. execute. Tier reloads are DMA transfers on their own channels,
         # so they overlap the step's compute; only the slower of the two
         # paces the step (LMCache-style async offload, paper §5.2).
-        dur = self.backend.execute(prefill_work, decode_reqs)
-        dur = max(dur, reload_penalty) + self.ecfg.scheduler_overhead_s
+        exec_s = self.backend.execute(prefill_work, decode_reqs)
+        stall = max(0.0, reload_penalty - exec_s)
+        dur = exec_s + stall + self.ecfg.scheduler_overhead_s
         ev.duration = dur
         self.busy_seconds += dur
         self.steps += 1
         if self.obs is not None:
             rid = self.engine_id
             p_tok = sum(w.chunk for w in prefill_work)
-            self.obs.trace.complete(
-                rid, "step", now, dur, cat="step",
-                args={"prefill_tokens": p_tok, "decode": len(decode_reqs),
-                      "running": len(self.running)})
+            args = {"prefill_tokens": p_tok, "decode": len(decode_reqs),
+                    "running": len(self.running)}
+            if stall > 0.0:
+                # the reload-stall seconds this step added on top of its
+                # compute — the attribution analyzer charges them to the
+                # reloader (reload_stall) and incumbents (collateral)
+                args["stall"] = round(stall, 9)
+            self.obs.trace.complete(rid, "step", now, dur, cat="step",
+                                    args=args)
             self.obs.step_seconds.observe(dur, (rid,))
+            if drift is not None:
+                if not ev.admitted:
+                    # admission changed nothing: est_step priced exactly
+                    # this batch — an honest predicted/realized pair
+                    drift.observe("step_seconds", now, est_step, exec_s)
+                if len(self.drift_samples) < 2048:
+                    from repro.serving.profiler import StepSample
+                    d_ctx = (sum(r.prompt_len + r.generated
+                                 for r in decode_reqs)
+                             // len(decode_reqs)) if decode_reqs else 0
+                    self.drift_samples.append(StepSample(
+                        measured_s=exec_s, prefill_tokens=p_tok,
+                        prefill_context=max(
+                            (w.context for w in prefill_work), default=0),
+                        decode_batch=len(decode_reqs),
+                        decode_avg_context=d_ctx))
             if p_tok:
                 self.obs.tokens.inc(p_tok, (rid, "prefill"))
             if decode_reqs:

@@ -493,13 +493,15 @@ def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
                       replicas: int = 3,
                       router: str = "kv_aware_migrate",
                       telemetry: bool = False,
-                      scaling=None, prefill_replicas: int = 0
+                      scaling=None, prefill_replicas: int = 0,
+                      drift: bool = False
                       ) -> tuple[list[str], list[str], object]:
     """One cluster replay leg on the logical stack. Returns (trace lines,
     conservation violations observed at step boundaries, cluster). With
     ``telemetry``, a shared :class:`~repro.obs.Telemetry` plane is
-    attached to every replica and left on ``cluster.obs``. With
-    ``scaling`` (a :class:`ScalingConfig`), the fleet is elastic:
+    attached to every replica and left on ``cluster.obs`` (``drift``
+    additionally enables the prediction-drift watchdog before the run).
+    With ``scaling`` (a :class:`ScalingConfig`), the fleet is elastic:
     ``replicas`` is the *starting* decode-pool size, an engine factory is
     installed so the policy can grow it, and scale/drain/retire events
     enter the byte-compared trace stream. ``prefill_replicas`` adds
@@ -532,6 +534,8 @@ def run_cluster_trace(programs: list[Program], rc: ReplayConfig,
     if telemetry:
         from repro.obs import Telemetry
         cluster.attach_telemetry(Telemetry())
+        if drift:
+            cluster.obs.enable_drift()
     violations: list[str] = []
 
     def _capture(e, ev, now):
@@ -744,6 +748,114 @@ def run_regret_demo(seed: int, out_dir,
     return verdict
 
 
+def drift_scenario_programs() -> list[Program]:
+    """Scripted mispredicted-tool workload for the drift watchdog demo:
+    one long program whose ``survey`` tool durations first alternate
+    hard between ~60ms and 2s (the mean-based tool-CDF predictor is then
+    wrong by >90% on every short call — p90 relative error crosses the
+    fire threshold), then settle at a steady 2s (the predictor converges
+    and the alert must *resolve*). Fully deterministic — the alternation
+    is scripted in the turns, not sampled. Turns are kept small (16
+    prompt tokens each) so all 55 of them fit the smoke block pool —
+    the demo must reach phase 2 or the resolve can never fire."""
+    turns = []
+    for k in range(24):                      # phase 1: fire
+        turns.append(Turn(new_tokens=16, output_tokens=3, tool="survey",
+                          tool_duration=0.06 if k % 2 == 0 else 2.0,
+                          output_text=""))
+    for _ in range(30):                      # phase 2: resolve
+        turns.append(Turn(new_tokens=16, output_tokens=3, tool="survey",
+                          tool_duration=2.0, output_text=""))
+    turns.append(Turn(new_tokens=16, output_tokens=3, tool=None,
+                      tool_duration=0.0, output_text="Final answer."))
+    return [Program(program_id="drift-oracle", arrival_time=0.0,
+                    turns=turns)]
+
+
+def run_attribution_demo(seed: int, out_dir,
+                         rc: Optional[ReplayConfig] = None,
+                         replicas: int = 3,
+                         router: str = "kv_aware_migrate") -> dict:
+    """The ISSUE's attribution + drift scenario, in two parts:
+
+    1. a seeded cluster run with telemetry *and* the drift watchdog on,
+       analyzed by :mod:`repro.obs.attribution` — every completed
+       program's JCT decomposition must sum to its JCT within ε, and a
+       second same-seed run must produce a byte-identical report (and
+       byte-identical drift status);
+    2. the scripted :func:`drift_scenario_programs` workload on a single
+       engine — the watchdog must fire a drift alert for *exactly* the
+       ``tool_duration`` estimator (every other estimator quiet) and
+       later resolve it once the predictor converges.
+
+    Writes ``attribution.json``, ``drift.json`` and ``verdict.json`` to
+    ``out_dir``; returns the verdict dict."""
+    from repro.obs import Telemetry
+    from repro.obs import attribution as obs_attr
+    from repro.obs.drift import DriftConfig
+    if rc is None:
+        rc = ReplayConfig()
+    progs = cluster_programs(seed, n=16, rate_jps=3.0)
+
+    def one_run():
+        _, _, cluster = run_cluster_trace(progs, rc, replicas, router,
+                                          telemetry=True, drift=True)
+        report = cluster.obs.attribution()
+        status = json.dumps(cluster.obs.drift.status(), indent=2,
+                            sort_keys=True) + "\n"
+        return report, obs_attr.dumps(report), status
+
+    report, bytes_a, status_a = one_run()
+    _, bytes_b, status_b = one_run()
+    out = pathlib.Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    (out / "attribution.json").write_text(bytes_a)
+
+    # part 2: the mispredicted-tool scenario (tight window/min_samples so
+    # the scripted 54-pair workload crosses both thresholds)
+    tel = Telemetry()
+    tel.enable_drift(DriftConfig(window=24, min_samples=24))
+    run_engine(drift_scenario_programs(), rc, physical=False,
+               telemetry=tel)
+    drift_marks = [e for e in tel.trace.events
+                   if e[0] == "i" and e[4] == "drift"]
+    fired = sorted({e[5]["estimator"] for e in drift_marks
+                    if e[3] == "drift_alert"})
+    resolved = sorted({e[5]["estimator"] for e in drift_marks
+                       if e[3] == "drift_resolve"})
+    scenario_report = tel.attribution()
+    (out / "drift.json").write_text(
+        json.dumps(tel.drift.status(), indent=2, sort_keys=True) + "\n")
+
+    fleet = report["fleet"]
+    verdict = {
+        "seed": seed, "replicas": replicas, "router": router,
+        "n_programs": fleet["n_programs"],
+        "sums_to_jct": report["ok"],
+        "report_deterministic": bytes_a == bytes_b,
+        "drift_deterministic": status_a == status_b,
+        "by_component": {c: v["seconds"]
+                         for c, v in fleet["by_component"].items()},
+        "top_bottleneck": fleet["bottlenecks"][0]
+        if fleet["bottlenecks"] else None,
+        "scenario": {
+            "alerts_fired": fired,
+            "alerts_resolved": resolved,
+            "sums_to_jct": scenario_report["ok"],
+        },
+        "artifacts": {"attribution": str(out / "attribution.json"),
+                      "drift": str(out / "drift.json")},
+        "ok": (report["ok"] and fleet["n_programs"] >= 4
+               and bytes_a == bytes_b and status_a == status_b
+               and scenario_report["ok"]
+               and fired == ["tool_duration"]
+               and "tool_duration" in resolved),
+    }
+    (out / "verdict.json").write_text(
+        json.dumps(verdict, indent=2, sort_keys=True) + "\n")
+    return verdict
+
+
 # ----------------------------------------------------------------- CLI
 def main(argv=None) -> int:
     import argparse
@@ -780,6 +892,14 @@ def main(argv=None) -> int:
                          "trace + metrics + TTL audit and gates on "
                          "schema validity, byte-identical same-seed "
                          "export and a complete audit chain")
+    ap.add_argument("--attribution", action="store_true",
+                    help="attribution mode: seeded cluster run with "
+                         "telemetry + drift watchdog; gates on every "
+                         "program's JCT decomposition summing to its "
+                         "JCT, byte-identical same-seed reports, and "
+                         "the scripted mispredicted-tool scenario "
+                         "firing (and resolving) a drift alert for "
+                         "exactly the tool-duration estimator")
     ap.add_argument("--regret", action="store_true",
                     help="regret mode: dense seeded cluster run replayed "
                          "under counterfactual TTL policies (oracle, "
@@ -792,6 +912,19 @@ def main(argv=None) -> int:
     out.mkdir(parents=True, exist_ok=True)
     failed = False
     for seed in args.seeds:
+        if args.attribution:
+            verdict = run_attribution_demo(seed, out / f"seed{seed}",
+                                           replicas=args.replicas,
+                                           router=args.router)
+            print(f"attribution seed {seed}: "
+                  f"{'OK' if verdict['ok'] else 'FAIL'} "
+                  f"(programs={verdict['n_programs']}, "
+                  f"sums_to_jct={verdict['sums_to_jct']}, "
+                  f"deterministic={verdict['report_deterministic'] and verdict['drift_deterministic']}, "
+                  f"fired={verdict['scenario']['alerts_fired']}, "
+                  f"resolved={verdict['scenario']['alerts_resolved']})")
+            failed |= not verdict["ok"]
+            continue
         if args.regret:
             verdict = run_regret_demo(seed, out / f"seed{seed}",
                                       replicas=args.replicas,

@@ -1,0 +1,179 @@
+"""Critical-path JCT attribution (repro.obs.attribution).
+
+Synthetic-trace unit tests pin the carve rules (reload stall vs
+collateral, wire time only while queued, never carving past a span) and
+the sums-to-JCT invariant; integration tests run seeded engine and
+cluster traces through the live plane and assert every completed
+program decomposes exactly, deterministically.
+"""
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.attribution import COMPONENTS, analyze, dumps
+from repro.sim.replay import (ReplayConfig, cluster_programs, run_cluster_trace,
+                              run_engine, seeded_programs)
+
+
+def _program_events(pid="p0", replica="r0", t0=0.0):
+    """queued [0,1) -> prefill [1,2) -> decode [2,3.5) -> finished: the
+    minimal complete lifecycle (phase spans tile arrival..end)."""
+    return [
+        ("b", t0 + 0.0, pid, "queued", {"replica": replica}),
+        ("e", t0 + 1.0, pid, "queued", None),
+        ("b", t0 + 1.0, pid, "prefill", None),
+        ("e", t0 + 2.0, pid, "prefill", None),
+        ("b", t0 + 2.0, pid, "decode", None),
+        ("e", t0 + 3.5, pid, "decode", None),
+        ("n", t0 + 3.5, pid, "finished", None),
+    ]
+
+
+class TestBaseDecomposition:
+    def test_tiled_spans_sum_to_jct(self):
+        rep = analyze(_program_events())
+        p = rep["programs"]["p0"]
+        assert p["jct"] == pytest.approx(3.5)
+        assert p["components"] == {"queueing": 1.0, "prefill": 1.0,
+                                   "decode": 1.5}
+        assert p["sums_to_jct"] and rep["ok"]
+        assert p["residual"] == pytest.approx(0.0, abs=1e-9)
+
+    def test_worst_edge_is_longest(self):
+        p = analyze(_program_events())["programs"]["p0"]
+        assert p["worst_edge"]["component"] == "decode"
+        assert p["worst_edge"]["seconds"] == pytest.approx(1.5)
+
+    def test_component_names_are_canonical(self):
+        p = analyze(_program_events())["programs"]["p0"]
+        assert set(p["components"]) <= set(COMPONENTS)
+
+    def test_unfinished_program_reported_incomplete(self):
+        evs = _program_events()[:-1]           # no "finished" mark
+        rep = analyze(evs)
+        assert rep["incomplete_programs"] == ["p0"]
+        assert not rep["programs"] and not rep["ok"]
+
+    def test_pinned_span_is_concurrent_not_a_component(self):
+        evs = _program_events() + [
+            ("b", 0.5, "p0", "pinned", None),
+            ("e", 2.5, "p0", "pinned", None),
+        ]
+        p = analyze(evs)["programs"]["p0"]
+        assert p["pinned_seconds"] == pytest.approx(2.0)
+        assert sum(p["components"].values()) == pytest.approx(p["jct"])
+
+
+class TestReloadCarves:
+    def test_own_reload_stall_carved_from_prefill(self):
+        evs = _program_events() + [
+            ("d", 1.0, "r0", "reload", "p0", ()),
+            ("X", 1.0, 0.5, "r0", "step", "step", {"stall": 0.2}),
+        ]
+        p = analyze(evs)["programs"]["p0"]
+        assert p["components"]["reload_stall"] == pytest.approx(0.2)
+        assert p["components"]["prefill"] == pytest.approx(0.8)
+        assert p["sums_to_jct"]
+
+    def test_bystander_charged_collateral(self):
+        evs = (_program_events("p0", "r0")
+               + _program_events("p1", "r0", t0=1.5)
+               + [("d", 2.5, "r0", "reload", "p0", ()),
+                  ("X", 2.5, 0.6, "r0", "step", "step", {"stall": 0.3})])
+        rep = analyze(evs)
+        # p0's decode [2,3.5) overlaps its own reload step -> stall;
+        # p1's prefill [2.5,3.5) overlaps someone else's -> collateral
+        assert rep["programs"]["p0"]["components"]["reload_stall"] \
+            == pytest.approx(0.3)
+        assert rep["programs"]["p1"]["components"]["reload_collateral"] \
+            == pytest.approx(0.3)
+        assert rep["ok"]
+
+    def test_carve_never_exceeds_span(self):
+        evs = _program_events() + [
+            ("d", 1.0, "r0", "reload", "p0", ()),
+            # stall longer than the whole prefill span: clipped to it
+            ("X", 1.0, 5.0, "r0", "step", "step", {"stall": 5.0}),
+        ]
+        p = analyze(evs)["programs"]["p0"]
+        assert p["components"]["reload_stall"] == pytest.approx(1.0)
+        assert "prefill" not in p["components"]       # fully carved
+        assert p["sums_to_jct"]
+
+
+class TestWireCarves:
+    @pytest.mark.parametrize("reason,comp", [
+        ("rehome", "migration_wire"), ("drain", "drain_wire"),
+        ("handoff", "handoff_wire")])
+    def test_queued_flight_overlap_charged_by_reason(self, reason, comp):
+        evs = _program_events() + [
+            ("i", 0.4, "cluster", "migrate", "cluster",
+             {"program": "p0", "arrive": 0.9, "reason": reason,
+              "src": "r1", "dst": "r0"}),
+        ]
+        p = analyze(evs)["programs"]["p0"]
+        assert p["components"][comp] == pytest.approx(0.5)
+        assert p["components"]["queueing"] == pytest.approx(0.5)
+        assert p["sums_to_jct"]
+
+    def test_flight_hidden_behind_tool_pause_is_free(self):
+        # flight entirely inside the decode span: no queued overlap, so
+        # nothing is re-attributed (the wait didn't cost queue time)
+        evs = _program_events() + [
+            ("i", 2.1, "cluster", "migrate", "cluster",
+             {"program": "p0", "arrive": 2.4, "reason": "rehome",
+              "src": "r1", "dst": "r0"}),
+        ]
+        p = analyze(evs)["programs"]["p0"]
+        assert "migration_wire" not in p["components"]
+        assert p["sums_to_jct"]
+
+
+class TestFleetRollup:
+    def test_by_component_and_bottlenecks(self):
+        rep = analyze(_program_events("p0") + _program_events("p1", t0=10.0))
+        fleet = rep["fleet"]
+        assert fleet["n_programs"] == 2
+        assert fleet["total_jct_seconds"] == pytest.approx(7.0)
+        assert fleet["by_component"]["decode"]["seconds"] \
+            == pytest.approx(3.0)
+        fracs = sum(v["fraction"] for v in fleet["by_component"].values())
+        assert fracs == pytest.approx(1.0)
+        # ranked most-expensive first
+        secs = [b["seconds"] for b in fleet["bottlenecks"]]
+        assert secs == sorted(secs, reverse=True)
+
+
+class TestLivePlane:
+    @pytest.fixture(scope="class")
+    def tel(self):
+        tel = Telemetry()
+        run_engine(seeded_programs(0, n=4, twins=False), ReplayConfig(),
+                   physical=False, telemetry=tel)
+        return tel
+
+    def test_every_completed_program_sums(self, tel):
+        rep = tel.attribution()
+        assert rep["ok"] and rep["fleet"]["n_programs"] >= 4
+        for p in rep["programs"].values():
+            assert p["sums_to_jct"]
+            assert sum(p["components"].values()) \
+                == pytest.approx(p["jct"], abs=1e-6)
+
+    def test_refresh_metrics_idempotent(self, tel):
+        tel.attribution()
+        first = {k: v for k, v in tel.jct_components.values.items()}
+        tel.attribution()
+        assert tel.jct_components.values == first
+        assert "continuum_jct_component_seconds" \
+            in tel.metrics.exposition()
+
+    def test_cluster_run_deterministic_report(self):
+        def one():
+            rc = ReplayConfig()
+            _, violations, cluster = run_cluster_trace(
+                cluster_programs(0, n=8, rate_jps=3.0), rc, replicas=2,
+                telemetry=True, drift=True)
+            assert not violations
+            return dumps(cluster.obs.attribution())
+        a, b = one(), one()
+        assert a == b

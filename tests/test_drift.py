@@ -1,0 +1,183 @@
+"""Prediction-drift watchdog (repro.obs.drift).
+
+Unit coverage of the DriftMonitor itself (windows, deferred pairs,
+fire/resolve hysteresis, recalibrators) plus the scripted
+mispredicted-tool scenario end to end: exactly the tool_duration alert
+fires and resolves while the well-calibrated estimators stay quiet.
+"""
+import pytest
+
+from repro.obs import Telemetry
+from repro.obs.drift import (DriftConfig, DriftMonitor, _quantile,
+                             _rel_error)
+from repro.sim.replay import (ReplayConfig, drift_scenario_programs,
+                              run_engine)
+
+
+def _monitor(**kw) -> tuple[DriftMonitor, Telemetry]:
+    cfg = DriftConfig(**{"window": 8, "min_samples": 4, "check_every": 2,
+                         **kw})
+    tel = Telemetry()
+    return DriftMonitor(tel.metrics, tel.trace, cfg), tel
+
+
+class TestErrorMath:
+    def test_symmetric_relative_error(self):
+        assert _rel_error(1.0, 2.0, 0.05) == pytest.approx(0.5)
+        assert _rel_error(2.0, 1.0, 0.05) == pytest.approx(0.5)
+        # floor keeps near-zero pairs from exploding the ratio
+        assert _rel_error(0.0, 0.01, 0.05) == pytest.approx(0.2)
+
+    def test_nearest_rank_quantile(self):
+        vals = [1.0, 2.0, 3.0, 4.0]
+        assert _quantile(vals, 0.5) == 3.0
+        assert _quantile(vals, 0.9) == 4.0
+        assert _quantile([], 0.9) == 0.0
+
+
+class TestDeferredPairs:
+    def test_predict_then_realize_records_one_pair(self):
+        d, _ = _monitor()
+        d.predict("queue_eta", "p0", 0.0, 1.0)
+        d.realize("queue_eta", "p0", 1.0, 2.0)
+        assert d._win["queue_eta"].total == 1
+        assert list(d._win["queue_eta"].pairs) == [(1.0, 2.0)]
+        assert not d._pending
+
+    def test_repredict_overwrites(self):
+        d, _ = _monitor()
+        d.predict("queue_eta", "p0", 0.0, 1.0)
+        d.predict("queue_eta", "p0", 1.0, 5.0)
+        d.realize("queue_eta", "p0", 2.0, 5.0)
+        assert list(d._win["queue_eta"].pairs) == [(5.0, 5.0)]
+
+    def test_realize_without_predict_is_noop(self):
+        d, _ = _monitor()
+        d.realize("queue_eta", "p0", 1.0, 2.0)
+        assert "queue_eta" not in d._win
+
+    def test_drop_cancels(self):
+        d, _ = _monitor()
+        d.predict("queue_eta", "p0", 0.0, 1.0)
+        d.drop("queue_eta", "p0")
+        d.realize("queue_eta", "p0", 1.0, 2.0)
+        assert "queue_eta" not in d._win
+
+    def test_pending_cap_evicts_oldest(self):
+        d, _ = _monitor(pending_cap=3)
+        for i in range(4):
+            d.predict("queue_eta", f"p{i}", float(i), 1.0)
+        assert len(d._pending) == 3
+        assert ("queue_eta", "p0") not in d._pending
+        assert ("queue_eta", "p3") in d._pending
+
+
+class TestFireResolve:
+    def test_fires_then_resolves_with_hysteresis(self):
+        d, tel = _monitor(window=8, min_samples=4, check_every=2,
+                          fire_p90=0.9, resolve_p90=0.55)
+        for i in range(8):                          # wildly wrong pairs
+            d.observe("tool_duration", float(i), 0.05, 2.0)
+        assert d._alerting["tool_duration"] is True
+        assert d.alerts_fired == 1
+        # wrong -> fires exactly once (no re-fire while alerting)
+        for i in range(4):
+            d.observe("tool_duration", 8.0 + i, 0.05, 2.0)
+        assert d.alerts_fired == 1
+        # calibrated pairs wash the window -> resolve
+        for i in range(16):
+            d.observe("tool_duration", 12.0 + i, 2.0, 2.0)
+        assert d._alerting["tool_duration"] is False
+        marks = [(e[3], e[5]["estimator"]) for e in tel.trace.events
+                 if e[0] == "i" and e[4] == "drift"]
+        assert ("drift_alert", "tool_duration") in marks
+        assert ("drift_resolve", "tool_duration") in marks
+
+    def test_no_verdict_below_min_samples(self):
+        d, _ = _monitor(window=8, min_samples=6, check_every=2)
+        for i in range(4):
+            d.observe("queue_eta", float(i), 0.05, 2.0)
+        assert d.alerts_fired == 0
+
+    def test_counters_and_gauges_exposed(self):
+        d, tel = _monitor()
+        for i in range(8):
+            d.observe("step_seconds", float(i), 1.0, 1.0)
+        text = tel.metrics.exposition()
+        assert "continuum_drift_samples_total" in text
+        assert "continuum_drift_p90_rel_error" in text
+
+
+class TestRecalibrators:
+    def test_fire_runs_recalibrator_result_reported_not_applied(self):
+        d, tel = _monitor()
+        seen = []
+        d.add_recalibrator("step_seconds", "refit",
+                           lambda: seen.append(1) or {"mfu": 0.5})
+        for i in range(8):
+            d.observe("step_seconds", float(i), 0.05, 2.0)
+        assert seen == [1]
+        assert d.recalibrations[0]["result"] == {"mfu": 0.5}
+        assert d.recalibrations[0]["recalibrator"] == "refit"
+        recal = [e for e in tel.trace.events
+                 if e[0] == "i" and e[3] == "drift_recalibrate"]
+        assert len(recal) == 1
+
+    def test_recalibrator_exception_is_contained(self):
+        def boom():
+            raise RuntimeError("no samples")
+        d, _ = _monitor()
+        d.add_recalibrator("step_seconds", "refit", boom)
+        for i in range(8):
+            d.observe("step_seconds", float(i), 0.05, 2.0)
+        assert "RuntimeError" in d.recalibrations[0]["result"]["error"]
+
+
+class TestStatus:
+    def test_status_shape(self):
+        d, _ = _monitor()
+        d.observe("queue_eta", 0.0, 1.0, 1.5)
+        d.predict("tool_duration", "p0", 0.0, 1.0)
+        st = d.status()
+        assert st["pending_pairs"] == 1
+        (est,) = st["estimators"]
+        assert est["estimator"] == "queue_eta"
+        assert est["samples"] == est["total_samples"] == 1
+        assert est["alerting"] is False
+
+
+class TestScenario:
+    """The CI-gated mispredicted-tool story, at test scale: alternating
+    60ms/2s tool durations make the mean-based predictor wrong by >90%
+    on every short call (fire), then a steady 2s phase converges it
+    (resolve) — and only tool_duration trips."""
+
+    @pytest.fixture(scope="class")
+    def tel(self):
+        tel = Telemetry()
+        tel.enable_drift(DriftConfig(window=24, min_samples=24))
+        run_engine(drift_scenario_programs(), ReplayConfig(),
+                   physical=False, telemetry=tel)
+        return tel
+
+    def test_fires_and_resolves_exactly_tool_duration(self, tel):
+        marks = [e for e in tel.trace.events
+                 if e[0] == "i" and e[4] == "drift"]
+        fired = {e[5]["estimator"] for e in marks if e[3] == "drift_alert"}
+        resolved = {e[5]["estimator"] for e in marks
+                    if e[3] == "drift_resolve"}
+        assert fired == {"tool_duration"}
+        assert resolved == {"tool_duration"}
+
+    def test_control_estimators_stay_quiet(self, tel):
+        st = tel.drift.status()
+        others = [e for e in st["estimators"]
+                  if e["estimator"] != "tool_duration"]
+        assert others, "scenario must exercise more than one estimator"
+        assert all(not e["alerting"] for e in others)
+
+    def test_all_tool_pairs_realized(self, tel):
+        # 54 tool turns -> 54 (predicted, observed) pairs; a wiring leak
+        # (predict overwritten before realize) shows up as a shortfall
+        st = {e["estimator"]: e for e in tel.drift.status()["estimators"]}
+        assert st["tool_duration"]["total_samples"] == 54

@@ -270,6 +270,97 @@ class TestScalingPolicy:
         assert len(c.engines) == 1 and not c.draining
 
 
+class TestEtaAggregate:
+    """ISSUE 10 satellite: the scaling signal used to collapse per-
+    replica queue ETAs with a mean, which washes out a single hot
+    replica among idle peers — p90/max keep tail congestion visible."""
+
+    def _hot_fleet(self, n=4):
+        c = make_cluster(n)
+        for i in range(8):
+            c.engines[0].scheduler.waiting.append(
+                Request(f"hot-{i}", 0, 6000, 64, 0.0, 0.0))
+        return c
+
+    def _cfg(self, thresh, agg):
+        return ScalingConfig(min_replicas=1, max_replicas=6,
+                             scale_up_eta_s=thresh, up_hold_s=0.0,
+                             cooldown_s=0.0, eta_aggregate=agg)
+
+    def test_mean_washes_out_single_hot_replica(self):
+        c = self._hot_fleet()
+        hot = c.engines[0].queue_eta(0.0)
+        assert hot > 0
+        thresh = hot / 2                 # mean = hot/4 < thresh < hot
+        assert ScalingPolicy(self._cfg(thresh, "mean")).step(c, 0.0) is None
+        assert len(c.engines) == 4
+
+    @pytest.mark.parametrize("agg", ["p90", "max"])
+    def test_tail_aggregate_triggers_scale_up(self, agg):
+        c = self._hot_fleet()
+        thresh = c.engines[0].queue_eta(0.0) / 2
+        assert ScalingPolicy(self._cfg(thresh, agg)).step(c, 0.0) == "up"
+        assert len(c.engines) == 5
+
+    def test_signal_ordering(self):
+        c = self._hot_fleet()
+        by = {agg: ScalingPolicy(self._cfg(1.0, agg)).signals(c, 0.0)[0]
+              for agg in ("mean", "p90", "max")}
+        assert by["mean"] < by["p90"] <= by["max"]
+        assert by["p90"] == by["max"]    # 4 replicas: p90 is the hottest
+
+    def test_unknown_aggregate_rejected(self):
+        c = self._hot_fleet(2)
+        with pytest.raises(AssertionError):
+            ScalingPolicy(self._cfg(1.0, "median")).signals(c, 0.0)
+
+
+class TestPrefillEngineConfig:
+    """ISSUE 10 satellite: prefill-only replicas get their own
+    EngineConfig — larger chunk budget, no TTL pins — instead of
+    inheriting the decode config wholesale."""
+
+    def test_derived_config_shape(self):
+        from repro.serving.cluster import prefill_engine_config
+        ecfg = EngineConfig(policy="continuum", chips=2, chunk_size=1024,
+                            kv_budget_bytes=2e9, max_batch=8)
+        pcfg = prefill_engine_config(ecfg)
+        assert pcfg.policy == "fcfs_program"
+        assert pcfg.chunk_size == 4096
+        assert pcfg.chips == ecfg.chips
+        assert pcfg.kv_budget_bytes == ecfg.kv_budget_bytes
+        assert ecfg.policy == "continuum"         # original untouched
+
+    def test_seed_prefill_replica_uses_prefill_config(self):
+        c = make_cluster(2, prefill=1)
+        pf, dec = c.engine_by_id("pf0"), c.engine_by_id("r0")
+        assert pf.ecfg.policy == "fcfs_program"
+        assert pf.ecfg.chunk_size == dec.ecfg.chunk_size * 4
+        assert pf.scheduler.policy.retains is False
+
+    def test_scaled_up_prefill_replica_uses_prefill_config(self):
+        c = make_cluster(2)
+        e = c.add_engine(0.0, role="prefill")
+        assert e.role == "prefill"
+        assert e.ecfg.policy == "fcfs_program"
+        assert e.scheduler.policy.retains is False
+        # decode scale-up still uses the decode config
+        d = c.add_engine(1.0, role="decode")
+        assert d.ecfg.policy == "continuum"
+
+    def test_prefill_replica_never_pins(self):
+        c = make_cluster(2, prefill=1)
+        pf = c.engine_by_id("pf0")
+        req = Request("pNoPin", 0, 512, 4, 0.0, 0.0, tool="t",
+                      tool_duration=50.0)
+        assert c.router.route(req) is pf
+        pf.submit(req, 0.0)
+        drain_engine(pf)
+        assert pf.scheduler.stats.pins == 0
+        assert not pf.scheduler.pinned
+        assert c.stats.prefill_handoffs == 1      # handoff still happens
+
+
 class TestPrefillReplicas:
     def test_first_turn_routes_to_prefill_pool(self):
         c = make_cluster(2, prefill=1)

@@ -123,6 +123,28 @@ class TestRegistry:
         # no replica label anywhere in the fleet exposition
         assert "replica=" not in fleet.exposition()
 
+    def test_fleet_aggregation_never_sums_quantile_gauges(self):
+        """Regression (ISSUE 10 satellite): adding per-replica p90s is
+        statistically meaningless — a non-summable gauge must vanish
+        from the view that drops its label, not be summed, while
+        summable gauges on the same registry still sum."""
+        from repro.obs.registry import aggregate
+        reg = MetricsRegistry()
+        p90 = reg.gauge("drift_p90", "h", ("replica", "estimator"),
+                        summable=False)
+        p90.set(0.4, ("r0", "queue_eta"))
+        p90.set(0.8, ("r1", "queue_eta"))
+        occ = reg.gauge("occ", "h", ("replica",))
+        occ.set(1.0, ("r0",))
+        occ.set(2.0, ("r1",))
+        fleet = aggregate(reg)
+        assert "drift_p90" not in fleet.metrics
+        assert "drift_p90" not in fleet.exposition()
+        assert fleet.metrics["occ"].values == {(): 3.0}
+        # dropping a label the quantile doesn't carry keeps it intact
+        keep = aggregate(reg, drop_label="tenant")
+        assert keep.metrics["drift_p90"].values == p90.values
+
 
 class TestTrace:
     def test_ring_capacity_and_dropped(self):

@@ -5,7 +5,9 @@ scrapes it over real HTTP (stdlib urllib against an ephemeral port).
 Covers: /healthz, /metrics byte-identity with the in-process exposition
 and across scrapes, fleet aggregation dropping the replica label,
 clipped vs full /traces exports, per-program audit chains with 404 on
-unknown ids, the SSE /events cursor protocol, and /slo presence/absence.
+unknown ids, the SSE /events cursor protocol (including the gap frame a
+compacted cursor receives), /attribution reports, /drift status, and
+/slo presence/absence.
 """
 import json
 import urllib.error
@@ -146,6 +148,72 @@ class TestEvents:
         resumed = [int(l[4:]) for l in body.decode().splitlines()
                    if l.startswith("id: ")]
         assert resumed[0] == nxt + 1
+
+
+class TestEventsGap:
+    def test_compacted_cursor_gets_gap_frame(self):
+        """ISSUE 10 satellite: resuming a cursor the ring has compacted
+        past must announce exactly what was lost as an ``event: gap``
+        frame, never silently skip ahead."""
+        tel = Telemetry(trace_capacity=4)
+        for i in range(10):                    # seq 1..10; ring keeps 7..10
+            tel.trace.instant("r0", f"ev{i}", float(i))
+        srv = ObsServer(tel).start()
+        try:
+            _, body, _ = _get(srv.url("/events?limit=2&poll=0&from=2"))
+        finally:
+            srv.stop()
+        frames = [f for f in body.decode().split("\n\n") if f.strip()]
+        assert frames[0].startswith("event: gap")
+        gap = json.loads(frames[0].splitlines()[1][len("data: "):])
+        assert gap == {"from": 3, "to": 6, "dropped": 4}
+        # data frames resume exactly at the ring's oldest surviving event
+        ids = [int(l[4:]) for f in frames[1:] for l in f.splitlines()
+               if l.startswith("id: ")]
+        assert ids == [7, 8]
+
+    def test_live_cursor_sees_no_gap(self, server):
+        _, body, _ = _get(server.url("/events?limit=2&poll=0"))
+        assert "event: gap" not in body.decode()
+
+
+class TestAttributionEndpoint:
+    def test_report_and_single_program(self, plane, server):
+        _, body, _ = _get(server.url("/attribution"))
+        report = json.loads(body)
+        assert report["ok"] and report["fleet"]["n_programs"] >= 4
+        pid = sorted(report["programs"])[0]
+        _, body, _ = _get(server.url(f"/attribution/{pid}"))
+        prog = json.loads(body)
+        assert prog == report["programs"][pid]
+        assert prog["sums_to_jct"]
+
+    def test_unknown_program_404(self, server):
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(server.url("/attribution/no-such-program"))
+        assert exc.value.code == 404
+        assert "no completed program" in \
+            json.loads(exc.value.read())["error"]
+
+
+class TestDriftEndpoint:
+    def test_404_when_disabled(self, server):
+        with pytest.raises(urllib.error.HTTPError) as exc:
+            _get(server.url("/drift"))
+        assert exc.value.code == 404
+
+    def test_status_when_enabled(self):
+        tel = Telemetry()
+        tel.enable_drift()
+        tel.drift.observe("queue_eta", 0.0, 1.0, 1.5)
+        srv = ObsServer(tel).start()
+        try:
+            _, body, _ = _get(srv.url("/drift"))
+        finally:
+            srv.stop()
+        out = json.loads(body)
+        assert out["estimators"][0]["estimator"] == "queue_eta"
+        assert out == json.loads(json.dumps(tel.drift.status()))
 
 
 class TestSLOEndpoint:
